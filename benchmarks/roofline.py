@@ -1,0 +1,321 @@
+"""Roofline analysis (deliverable g).
+
+Three terms per (arch x shape x mesh), all in seconds-per-step on TPU v5e:
+
+    compute    = FLOPs            / (chips * 197e12  bf16 FLOP/s)
+    memory     = HBM bytes        / (chips * 819e9   B/s)
+    collective = collective bytes / (chips * 50e9    B/s per ICI link)
+
+IMPORTANT measurement caveat (verified empirically in this repo): XLA's
+HLO cost_analysis counts while/scan bodies ONCE, so the dry-run's raw
+``flops``/``bytes_accessed`` under-count layer-scanned models by ~L_x. The
+primary numbers here are therefore ANALYTIC (exact formulas from config x
+shape x mesh, below); the dry-run's measured values are kept as a
+cross-check column together with the correction factor. Collective bytes
+are parsed from the partitioned HLO with while-body attribution x trip
+count (see repro.launch.dryrun.parse_collectives + body multiplication).
+
+MODEL_FLOPS uses the paper-standard 6*N*D (dense) / 6*N_active*D (MoE);
+the ratio MODEL_FLOPS / analytic-HLO-FLOPs exposes remat and causal-waste
+overheads.
+"""
+from __future__ import annotations
+
+import json
+import math
+from dataclasses import dataclass
+from pathlib import Path
+
+from repro.configs.base import ARCH_IDS, SHAPES, get_config
+from repro.launch.specs import SLIDING_WINDOW, needs_sliding_window
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # B/s / chip
+ICI_BW = 50e9              # B/s / link
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+# ---------------------------------------------------------- param counting
+
+def param_counts(cfg):
+    """(total, active, routed_expert, embed-ish) param counts from the
+    model's own parameter table (exact, never drifts from the code)."""
+    from repro.models.model import get_model
+    import numpy as np
+    model = get_model(cfg)
+    table = model.param_table()
+    import jax
+    from repro.models.layers import PSpec
+    total = routed = embed = 0
+    def walk(node, path):
+        nonlocal total, routed, embed
+        if isinstance(node, PSpec):
+            n = int(np.prod(node.shape))
+            total += n
+            if any(p.startswith("we_") for p in path):
+                routed += n
+            if path[-1] in ("embed", "lm_head"):
+                embed += n
+            return
+        for k, v in node.items():
+            walk(v, path + (k,))
+    walk(table, ())
+    active = total - routed
+    if cfg.num_experts:
+        active += routed * cfg.top_k / cfg.num_experts
+    return total, int(active), routed, embed
+
+
+# ---------------------------------------------------------- FLOPs formulas
+
+def _attn_layers(cfg):
+    pat = cfg.pattern if not cfg.use_mla else ("mla",)
+    n_attn = sum(1 for i in range(cfg.num_layers)
+                 if pat[(max(0, i - cfg.first_dense_layers))
+                        % len(pat)] in ("attn", "mla"))
+    return n_attn
+
+
+def _ssm_layers(cfg):
+    return sum(1 for i in range(cfg.num_layers)
+               if cfg.pattern[i % len(cfg.pattern)] == "ssm")
+
+
+def analytic_flops(cfg, shape):
+    """Forward FLOPs for one step (global), split into parts; train
+    multiplies below."""
+    B, S = shape.global_batch, shape.seq_len
+    total, active, routed, embed_p = param_counts(cfg)
+    d, V = cfg.d_model, cfg.vocab_size
+    kind = shape.kind
+    T = B * S if kind != "decode" else B
+    # matmul'd parameter flops (excludes embedding gather; logits separate)
+    body_params = active - embed_p
+    matmul = 2.0 * T * body_params
+    logits = 2.0 * T * d * V
+    # attention mixing
+    n_attn = _attn_layers(cfg)
+    H = cfg.num_heads
+    hd = (cfg.nope_head_dim + cfg.rope_head_dim) if cfg.use_mla else cfg.head_dim
+    window = cfg.attn_window
+    if kind == "decode":
+        ctx = min(SLIDING_WINDOW, S) if needs_sliding_window(cfg, shape) \
+            else (min(window, S) if window else S)
+        attn = n_attn * 4.0 * B * H * hd * ctx
+    else:
+        if window:
+            eff = min(window, S) * S
+        else:
+            eff = S * S / 2.0
+        attn = n_attn * 4.0 * B * H * hd * eff
+    # SSD mixing (mamba2)
+    ssd = 0.0
+    n_ssm = _ssm_layers(cfg) if not cfg.use_mla else 0
+    if cfg.ssm_state and n_ssm:
+        N, P, Hs = cfg.ssm_state, cfg.ssm_head_dim, cfg.ssm_heads
+        if kind == "decode":
+            ssd = n_ssm * B * (4.0 * Hs * P * N)
+        else:
+            Q = cfg.ssm_chunk
+            nc = S / Q
+            per_chunk = 2.0 * Q * Q * N + 2.0 * Q * Q * Hs * P \
+                + 4.0 * Q * N * P * Hs
+            ssd = n_ssm * B * nc * per_chunk
+    fwd = matmul + logits + attn + ssd
+    return {"fwd": fwd, "matmul": matmul, "logits": logits, "attn": attn,
+            "ssd": ssd, "active_params": active, "total_params": total}
+
+
+def step_flops(cfg, shape):
+    f = analytic_flops(cfg, shape)
+    if shape.kind == "train":
+        # bwd = 2x fwd; remat recomputes the scanned body fwd once more
+        body = f["fwd"] - f["logits"]
+        return 3.0 * f["logits"] + 4.0 * body, f
+    return f["fwd"], f
+
+
+def model_flops(cfg, shape):
+    """Paper-standard 6*N*D (train) / 2*N*D (inference), N = active."""
+    _, active, _, _ = param_counts(cfg)
+    T = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    return (6.0 if shape.kind == "train" else 2.0) * active * T
+
+
+# ---------------------------------------------------------- bytes formulas
+
+def cache_bytes(cfg, shape):
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return 0.0
+    n_attn = _attn_layers(cfg)
+    by = 0.0
+    if cfg.use_mla:
+        by += n_attn * B * S * (cfg.kv_lora_rank + cfg.rope_head_dim) * 2
+    elif cfg.num_heads:
+        eff = min(cfg.attn_window or S, S)
+        if needs_sliding_window(cfg, shape):
+            eff = min(SLIDING_WINDOW, S)
+        by += n_attn * B * eff * 2 * cfg.num_kv_heads * cfg.head_dim * 2
+    if cfg.ssm_state:
+        n_ssm = _ssm_layers(cfg)
+        by += n_ssm * B * (cfg.ssm_heads * cfg.ssm_head_dim * cfg.ssm_state
+                           * 4 + (cfg.conv_width - 1)
+                           * (cfg.ssm_inner + 2 * cfg.ssm_state) * 2)
+    if cfg.lru_width:
+        n_lru = sum(1 for i in range(cfg.num_layers)
+                    if cfg.pattern[i % len(cfg.pattern)] == "rglru")
+        by += n_lru * B * (cfg.lru_width * 4 + (cfg.conv_width - 1)
+                           * cfg.lru_width * 2)
+    return by
+
+
+def step_bytes(cfg, shape):
+    """Approximate global HBM traffic per step (documented model):
+    weights read once (+grad/opt traffic for train), cache read+write for
+    decode, activations ~16 bytes/token/layer/d_model for full-seq modes."""
+    total, active, routed, _ = param_counts(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    d, L = cfg.d_model, cfg.num_layers
+    w_bytes = 2.0 * (active if shape.kind == "decode" else total)
+    if shape.kind == "train":
+        # read w, write w, read/write m & v(fp32-ish), read grads
+        w_bytes = total * (2 + 2 + 8 + 4)
+    T = B * (1 if shape.kind == "decode" else S)
+    act = 16.0 * T * d * L
+    cache = cache_bytes(cfg, shape) * (2.0 if shape.kind == "decode" else 1.0)
+    return w_bytes + act + cache
+
+
+# ------------------------------------------------------ collective formulas
+
+def step_collective_bytes(cfg, shape, mesh_shape):
+    """Analytic per-chip collective bytes (ring all-reduce ~2x payload).
+
+    TP (model axis): 2 activation all-reduces per layer fwd (attn-out,
+    mlp/moe-out); train doubles for bwd and adds the DP gradient
+    all-reduce of the chip's parameter shard over (pod x data)."""
+    n_model = mesh_shape.get("model", 1)
+    n_data = mesh_shape.get("data", 1) * mesh_shape.get("pod", 1)
+    chips = n_model * n_data
+    B, S = shape.global_batch, shape.seq_len
+    d, L = cfg.d_model, cfg.num_layers
+    T_loc = B * (1 if shape.kind == "decode" else S) / n_data
+    ar = lambda payload, n: 2.0 * payload * (n - 1) / max(n, 1)
+    per_layer = 2 * ar(T_loc * d * 2, n_model)         # two TP all-reduces
+    coll = L * per_layer
+    if shape.kind == "train":
+        coll *= 2.0                                     # backward activations
+        total, _, _, _ = param_counts(cfg)
+        coll += ar(total / n_model * 2, n_data)         # DP grad all-reduce
+    if shape.kind == "decode" and cfg.num_heads:
+        # seq-sharded LSE combine: ~2 tiny + one (B,H,hd) all-reduce/layer
+        hd = cfg.v_head_dim if cfg.use_mla else cfg.head_dim
+        coll += _attn_layers(cfg) * ar(B / n_data * cfg.num_heads * hd * 4,
+                                       n_model)
+    return coll
+
+
+# ----------------------------------------------------------------- report
+
+@dataclass
+class Row:
+    arch: str
+    shape: str
+    mesh: str
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    hlo_flops: float
+    useful_ratio: float
+    measured_flops: float
+    measured_coll: float
+    variant: str
+    note: str
+
+
+def _mesh_shape_of(mesh_name):
+    if mesh_name == "pod2x16x16":
+        return {"pod": 2, "data": 16, "model": 16}
+    if mesh_name.startswith("pod") and "x" in mesh_name[3:]:
+        parts = [int(x) for x in mesh_name[3:].split("x")]
+        if len(parts) == 2:
+            return {"data": parts[0], "model": parts[1]}
+        return {"pod": parts[0], "data": parts[1], "model": parts[2]}
+    return {"data": 16, "model": 16}
+
+
+def analyze(arch, shape_name, mesh_name="pod16x16"):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh_shape = _mesh_shape_of(mesh_name)
+    chips = math.prod(mesh_shape.values())
+    flops, parts = step_flops(cfg, shape)
+    byts = step_bytes(cfg, shape)
+    coll = step_collective_bytes(cfg, shape, mesh_shape)
+    compute_s = flops / (chips * PEAK_FLOPS)
+    memory_s = byts / (chips * HBM_BW)
+    collective_s = coll / ICI_BW           # already per-chip
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+
+    measured_flops = measured_coll = -1.0
+    variant = "native"
+    f = RESULTS / f"{arch}__{shape_name}__{mesh_name}.json"
+    if f.exists():
+        rec = json.loads(f.read_text())
+        measured_flops = rec.get("flops", -1) * chips
+        measured_coll = rec.get("collective_bytes", -1)
+        variant = rec.get("variant", "native")
+
+    notes = {
+        "compute": "more chips or lower-precision matmuls; raise per-chip "
+                   "utilization (larger per-chip tiles)",
+        "memory": "cut HBM traffic: quantized weights/KV, fused kernels, "
+                  "bigger batch to amortize weight reads",
+        "collective": "reshard to cut TP all-reduces (sequence/expert "
+                      "parallel), overlap collectives with compute",
+    }
+    return Row(arch, shape_name, mesh_name, compute_s, memory_s,
+               collective_s, dominant, mf, flops,
+               mf / flops if flops else 0.0, measured_flops, measured_coll,
+               variant, notes[dominant])
+
+
+def full_table(mesh_name="pod16x16"):
+    rows = []
+    for arch in ARCH_IDS:
+        for sname in SHAPES:
+            rows.append(analyze(arch, sname, mesh_name))
+    return rows
+
+
+def markdown_table(rows):
+    out = ["| arch | shape | compute s | memory s | collective s | dominant "
+           "| MODEL_FLOPS | HLO_FLOPs(analytic) | useful | variant |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(
+            f"| {r.arch} | {r.shape} | {r.compute_s:.3e} | {r.memory_s:.3e} "
+            f"| {r.collective_s:.3e} | **{r.dominant}** | {r.model_flops:.3g} "
+            f"| {r.hlo_flops:.3g} | {r.useful_ratio:.2f} | {r.variant} |")
+    return "\n".join(out)
+
+
+def run():
+    """CSV rows for benchmarks.run."""
+    lines = []
+    for r in full_table():
+        step_s = max(r.compute_s, r.memory_s, r.collective_s)
+        lines.append((f"roofline/{r.arch}/{r.shape}", step_s * 1e6,
+                      f"dominant={r.dominant} useful={r.useful_ratio:.2f}"))
+    return lines
+
+
+if __name__ == "__main__":
+    rows = full_table()
+    print(markdown_table(rows))

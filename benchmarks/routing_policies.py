@@ -1,0 +1,98 @@
+"""Benchmark: IslandRun vs the four Sec XI-A baselines on the healthcare
+workload (Scenario 4: 1000 queries, 40/35/25 sensitivity mix).
+
+Metrics per policy: privacy violations (Sec XI-C claim: IslandRun zero by
+design), rejected requests, total $ cost, latency p50/p95, local-compute
+utilization fraction."""
+from __future__ import annotations
+
+import time
+
+from repro.core.islands import TIER_CLOUD, TIER_PERSONAL
+from repro.core.lighthouse import Lighthouse
+from repro.core.mist import MIST
+from repro.core.tide import TIDE
+from repro.core.waves import BaselineRouter, Policy, WAVES
+from repro.core.workload import healthcare_workload
+
+POLICIES = ("islandrun", "islandrun_constraint", "cloud_only", "local_only",
+            "latency_greedy", "privacy_only")
+
+
+def build_registry():
+    from repro.core.islands import (IslandRegistry, cloud_island,
+                                    edge_island, personal_island)
+    reg = IslandRegistry()
+    for isl in [
+        personal_island("laptop", latency_ms=120, capacity_units=3.0),
+        personal_island("phone", latency_ms=250, capacity_units=0.5),
+        edge_island("home-nas", privacy=0.9, latency_ms=300,
+                    capacity_units=2.0),
+        edge_island("clinic-edge", privacy=0.8, latency_ms=450,
+                    capacity_units=6.0, datasets=("medlit",)),
+        cloud_island("gpt4-api", privacy=0.4, cost=0.02, latency_ms=900),
+        cloud_island("claude-api", privacy=0.5, cost=0.015, latency_ms=800),
+    ]:
+        reg.register(isl, reg.attestation_token(isl.island_id))
+    return reg
+
+
+def run_policy(name, n=1000, seed=0, advance_s=0.1):
+    reg = build_registry()
+    mist, tide = MIST(), TIDE(reg)
+    lh = Lighthouse(reg)
+    for i in reg.all():
+        lh.heartbeat(i.island_id)
+    if name == "islandrun":
+        router = WAVES(mist, tide, lh, Policy())
+    elif name == "islandrun_constraint":
+        router = WAVES(mist, tide, lh, Policy(mode="constraint"))
+    else:
+        router = BaselineRouter(name, mist, tide, lh)
+    wl = healthcare_workload(n, seed=seed)
+    viol = rej = 0
+    cost = 0.0
+    lats = []
+    local = 0
+    t0 = time.perf_counter()
+    for req, kind in wl:
+        d = router.route(req)
+        tide.advance(advance_s)
+        if not d.accepted:
+            rej += 1
+            continue
+        cost += d.island.cost_per_request
+        lats.append(tide.effective_latency_ms(d.island))
+        if d.island.tier == TIER_PERSONAL:
+            local += 1
+        if d.island.privacy < d.sensitivity and not d.sanitize:
+            viol += 1
+    dt_us = (time.perf_counter() - t0) / n * 1e6
+    lats.sort()
+    m = len(lats)
+    return {
+        "policy": name,
+        "violations": viol,
+        "rejected": rej,
+        "cost_usd": round(cost, 3),
+        "latency_p50_ms": round(lats[m // 2], 1) if m else -1,
+        "latency_p95_ms": round(lats[int(0.95 * m)] if m else -1, 1),
+        "local_fraction": round(local / max(n - rej, 1), 3),
+        "route_us": round(dt_us, 1),
+    }
+
+
+def run(n=1000, seed=0):
+    lines = []
+    for name in POLICIES:
+        r = run_policy(name, n=n, seed=seed)
+        lines.append((f"routing/{name}", r["route_us"],
+                      f"viol={r['violations']} rej={r['rejected']} "
+                      f"cost=${r['cost_usd']} p50={r['latency_p50_ms']}ms "
+                      f"local={r['local_fraction']}"))
+    return lines
+
+
+if __name__ == "__main__":
+    for name in POLICIES:
+        print(run_policy(name))

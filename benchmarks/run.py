@@ -1,0 +1,40 @@
+"""Benchmark harness entrypoint: ``PYTHONPATH=src python -m benchmarks.run``.
+
+One module per paper table/claim (see DESIGN.md §6 per-experiment index).
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (feature_matrix, kernels_micro, micro, roofline,
+                            routing_policies, serving)
+    t0 = time.time()
+    print("name,us_per_call,derived")
+    modules = [
+        ("feature_matrix", feature_matrix.run),
+        ("routing_policies", routing_policies.run),
+        ("micro", micro.run),
+        ("serving", serving.run),
+        ("kernels_micro", kernels_micro.run),
+        ("roofline", roofline.run),
+    ]
+    failures = 0
+    for name, fn in modules:
+        try:
+            for row, us, derived in fn():
+                print(f"{row},{us:.1f},{derived}")
+        except Exception as e:  # pragma: no cover
+            failures += 1
+            print(f"{name},ERROR,{type(e).__name__}: {e}", file=sys.stderr)
+    print(f"# done in {time.time() - t0:.1f}s, {failures} module failures",
+          file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

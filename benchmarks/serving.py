@@ -1,0 +1,74 @@
+"""Serving-stack benchmark: real reduced-model prefill/decode throughput on
+the local SHORE island + end-to-end engine requests/second (routing + MIST
++ execution), CPU numbers."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.launch.serve import build_mesh
+from repro.serving.engine import InferenceEngine, LocalModelServer
+from repro.core.workload import healthcare_workload
+
+
+def run():
+    lines = []
+    cfg = get_config("smollm-135m").reduced()
+    srv = LocalModelServer(cfg, max_len=160)
+    B, L = 4, 64
+    toks = jnp.zeros((B, L), jnp.int32)
+    cache = srv.model.init_cache(B, srv.max_len, dtype=jnp.bfloat16)
+    logits, cache = srv._prefill(srv.params, cache, {"tokens": toks})
+    jax.block_until_ready(logits)
+    t0 = time.perf_counter()
+    reps = 10
+    for _ in range(reps):
+        logits, c2 = srv._prefill(srv.params, cache, {"tokens": toks})
+    jax.block_until_ready(logits)
+    us = (time.perf_counter() - t0) / reps * 1e6
+    lines.append(("serve/prefill_b4_s64", us,
+                  f"{B * L / (us / 1e6):.0f} tok/s"))
+    tok = jnp.zeros((B, 1), jnp.int32)
+    logits, c2 = srv._decode(srv.params, cache, tok, jnp.int32(L))
+    jax.block_until_ready(logits)
+    t0 = time.perf_counter()
+    reps = 20
+    for i in range(reps):
+        logits, c2 = srv._decode(srv.params, c2, tok, jnp.int32(L + 1 + i))
+    jax.block_until_ready(logits)
+    us = (time.perf_counter() - t0) / reps * 1e6
+    lines.append(("serve/decode_step_b4", us, f"{B / (us / 1e6):.0f} tok/s"))
+
+    # continuous batcher throughput (slot recycling)
+    from repro.serving.batcher import ContinuousBatcher
+    b = ContinuousBatcher(cfg, num_slots=4, max_len=96)
+    for i in range(8):
+        b.submit(f"benchmark request {i}", max_new_tokens=4)
+    t0 = time.perf_counter()
+    done = b.run_until_done()
+    us = (time.perf_counter() - t0) / max(b.stats["decode_tokens"], 1) * 1e6
+    lines.append(("serve/continuous_batcher", us,
+                  f"reqs={len(done)} slots=4 ticks={b.stats['ticks']}"))
+
+    reg, waves = build_mesh()
+    eng = InferenceEngine(waves, reg,
+                          {"laptop": srv})
+    wl = healthcare_workload(30, seed=11)
+    t0 = time.perf_counter()
+    for req, _ in wl:
+        eng.submit(req, max_new_tokens=4)
+    us = (time.perf_counter() - t0) / len(wl) * 1e6
+    s = eng.stats()
+    lines.append(("serve/engine_e2e", us,
+                  f"viol={s['privacy_violations']} sanitized={s['sanitized']}"
+                  f" islands={len(s['by_island'])}"))
+    return lines
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

@@ -1,0 +1,77 @@
+"""Quickstart: boot a three-tier island mesh, route requests through
+IslandRun, and watch the privacy machinery work.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.core.islands import (IslandRegistry, cloud_island, edge_island,
+                                personal_island)
+from repro.core.lighthouse import Lighthouse
+from repro.core.mist import MIST
+from repro.core.mist_model import train_classifier
+from repro.core.tide import TIDE
+from repro.core.waves import WAVES, Policy, Request
+
+
+def main():
+    # 1. Register islands (attestation required — Attack-2 mitigation)
+    reg = IslandRegistry()
+    for isl in [
+        personal_island("laptop", latency_ms=120, capacity_units=3.0),
+        personal_island("phone", latency_ms=250, capacity_units=0.5),
+        edge_island("home-nas", privacy=0.9, latency_ms=300),
+        cloud_island("gpt4-api", privacy=0.4, cost=0.02, latency_ms=900),
+    ]:
+        reg.register(isl, reg.attestation_token(isl.island_id))
+
+    # 2. Agents: MIST (with the JAX stage-2 classifier), TIDE, LIGHTHOUSE
+    print("training MIST stage-2 classifier (JAX, in-repo)...")
+    clf = train_classifier(steps=150, n_per_class=100)
+    print(f"  train accuracy: {clf.train_accuracy:.3f}")
+    mist = MIST(classifier=clf)
+    tide = TIDE(reg, buffer="moderate")
+    lh = Lighthouse(reg)
+    for i in reg.all():
+        lh.heartbeat(i.island_id)
+    waves = WAVES(mist, tide, lh, Policy())
+
+    # 3. Route the paper's motivating examples
+    queries = [
+        ("Analyze treatment options for 45-year-old diabetic patient "
+         "John Doe with elevated HbA1c", "primary"),
+        ("What are common diabetes complications", "burstable"),
+        ("password = hunter2, please rotate the production key", "secondary"),
+        ("best hiking trails near mountains", "burstable"),
+    ]
+    print("\nrouting decisions:")
+    for q, prio in queries:
+        d = waves.route(Request(query=q, priority=prio))
+        where = d.island.island_id if d.accepted else f"REJECTED({d.reason})"
+        print(f"  s_r={d.sensitivity:.2f} -> {where:18s} | {q[:58]}")
+        tide.advance(0.5)
+
+    # 4. Cross-trust-boundary sanitization (reversible typed placeholders)
+    print("\ntrust-boundary sanitization:")
+    history = ("Patient John Doe visited Chicago hospital, SSN 123-45-6789",)
+    # force a cloud route with a low-sensitivity follow-up
+    for i in reg.all():
+        if not i.unbounded:
+            st = tide._st(i.island_id)
+            st.cpu = st.gpu = st.mem = 0.99
+    d = waves.route(Request(query="thanks, what should he read next",
+                            history=history, priority="burstable",
+                            prev_privacy=1.0))
+    print(f"  routed to {d.island.island_id} (tier 3), sanitize={d.sanitize}")
+    for t in d.sanitized_history:
+        print(f"  cloud sees : {t}")
+    cloud_reply = f"Based on the history, {d.sanitized_history[0].split()[1]} should rest."
+    print(f"  cloud says : {cloud_reply}")
+    print(f"  user sees  : {mist.desanitize(cloud_reply, d.placeholder_store)}")
+
+
+if __name__ == "__main__":
+    main()

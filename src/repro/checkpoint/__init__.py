@@ -1,0 +1,74 @@
+"""Pytree checkpointing: npz payload + json manifest (no orbax offline).
+
+Supports atomic save (tmp+rename), step-numbered directories and
+restore-into-structure so dtypes/shapes are validated on load.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save(path, tree, step: int | None = None, extra: dict | None = None):
+    path = Path(path)
+    if step is not None:
+        path = path / f"step_{step:08d}"
+    path.mkdir(parents=True, exist_ok=True)
+    flat = _flatten_with_paths(tree)
+    manifest = {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                for k, v in flat.items()}
+    if extra:
+        manifest["__extra__"] = extra
+    fd, tmp = tempfile.mkstemp(dir=path, suffix=".tmp")
+    os.close(fd)
+    written = tmp + ".npz"  # np.savez appends .npz to non-.npz names
+    np.savez(tmp, **{k: v.astype(np.float32) if v.dtype == jnp.bfloat16
+                     else v for k, v in flat.items()})
+    os.replace(written, path / "arrays.npz")
+    os.unlink(tmp)
+    (path / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    return path
+
+
+def restore(path, like):
+    """Restore into the structure of ``like`` (shapes/dtypes validated)."""
+    path = Path(path)
+    data = np.load(path / "arrays.npz")
+    manifest = json.loads((path / "manifest.json").read_text())
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for p, leaf in flat:
+        key = "/".join(str(getattr(q, "key", getattr(q, "idx", q)))
+                       for q in p)
+        arr = data[key]
+        want = manifest[key]
+        assert list(arr.shape) == want["shape"], (key, arr.shape, want)
+        target_dtype = (leaf.dtype if hasattr(leaf, "dtype")
+                        else np.asarray(leaf).dtype)
+        leaves.append(jnp.asarray(arr, dtype=target_dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def latest_step(root) -> int | None:
+    root = Path(root)
+    if not root.exists():
+        return None
+    steps = sorted(int(p.name.split("_")[1]) for p in root.iterdir()
+                   if p.name.startswith("step_"))
+    return steps[-1] if steps else None

@@ -1,0 +1,45 @@
+"""LIGHTHOUSE — mesh topology + island liveness (paper Sec IV, X).
+
+Maintains heartbeats over a virtual clock, island discovery (devices
+announce availability when coming online) and the conservative fallback:
+if LIGHTHOUSE itself crashes, WAVES keeps routing against the last cached
+island list (correct but slower to react, per the ablation in Sec XI-D).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+class Lighthouse:
+    def __init__(self, registry, heartbeat_timeout_s: float = 5.0):
+        self.registry = registry
+        self.timeout = heartbeat_timeout_s
+        self.clock = 0.0
+        self._last_beat: dict[str, float] = {}
+        self._cache: list = []
+        self.crashed = False
+        self.discovery_queries = 0
+
+    def advance(self, dt: float):
+        self.clock += dt
+
+    def heartbeat(self, island_id: str):
+        if island_id in self.registry:
+            self._last_beat[island_id] = self.clock
+
+    def announce(self, island_id: str):
+        """Island coming online (laptop wake, car start)."""
+        self.heartbeat(island_id)
+
+    def is_alive(self, island_id: str) -> bool:
+        t = self._last_beat.get(island_id)
+        return t is not None and (self.clock - t) <= self.timeout
+
+    def get_islands(self) -> list:
+        """Live islands; cached list when crashed (conservative fallback)."""
+        if self.crashed:
+            return list(self._cache)
+        self.discovery_queries += 1
+        alive = [i for i in self.registry.all() if self.is_alive(i.island_id)]
+        self._cache = alive
+        return alive

@@ -1,0 +1,138 @@
+"""MIST stage-2 contextual classifier, as an actual JAX model.
+
+The paper prescribes "a local small language model" for contextual
+classification (public/internal/confidential/restricted). Here that is a
+hashed char-trigram logistic classifier trained in-repo with the repro
+training substrate (our AdamW) on a synthetic labeled corpus — small enough
+that its inference cost keeps the paper's O(|q|*m + n) routing budget
+honest, and fully reproducible offline.
+"""
+from __future__ import annotations
+
+import random
+import zlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.training import optim
+
+CLASSES = ("public", "internal", "confidential", "restricted")
+DIM = 2048
+
+
+def featurize(text: str, dim: int = DIM) -> np.ndarray:
+    """Hashed char-trigram counts, l2-normalized."""
+    v = np.zeros(dim, np.float32)
+    t = f"  {text.lower()}  "
+    for i in range(len(t) - 2):
+        # crc32, not hash(): python's hash is salted per-process
+        h = zlib.crc32(t[i:i + 3].encode()) % dim
+        v[h] += 1.0
+    n = np.linalg.norm(v)
+    return v / n if n > 0 else v
+
+
+# --------------------------------------------------- synthetic labeled data
+
+_PUBLIC = [
+    "what is the capital of {c}", "explain how photosynthesis works",
+    "best hiking trails near mountains", "how do i sort a list in python",
+    "what are common {x} complications", "history of the roman empire",
+    "recipe for vegetable soup", "how far is the moon",
+    "difference between tcp and udp", "tips for learning guitar",
+]
+_INTERNAL = [
+    "summarize our team meeting notes from the retro",
+    "draft the q3 roadmap for review", "our codebase uses module {x}",
+    "deploy checklist for the staging cluster",
+    "rewrite this paragraph for the internal wiki",
+    "what did our team decide about the api redesign",
+]
+_CONFIDENTIAL = [
+    "customer data export for account {x} shows churn risk",
+    "the proprietary pricing model uses factor {x}",
+    "salary bands for level {x} engineers",
+    "our confidential acquisition target list",
+    "source code for the licensing server module {x}",
+    "unreleased product specs for project {c}",
+]
+_RESTRICTED = [
+    "patient {c} was diagnosed with diabetes, HbA1c elevated",
+    "ssn and date of birth for the claimant",
+    "privileged and confidential: case strategy for docket {x}",
+    "password for the production database is {x}",
+    "lab results show elevated markers, adjust insulin dosage",
+    "private key material for the signing service",
+]
+_FILL_C = ["France", "Japan", "Chicago", "Berlin", "Alice Johnson", "Acme"]
+_FILL_X = ["alpha", "7", "42", "delta", "omega", "13b"]
+
+
+def synth_corpus(n_per_class: int = 200, seed: int = 0):
+    rng = random.Random(seed)
+    data = []
+    for label, temps in enumerate((_PUBLIC, _INTERNAL, _CONFIDENTIAL,
+                                   _RESTRICTED)):
+        for _ in range(n_per_class):
+            t = rng.choice(temps)
+            t = t.replace("{c}", rng.choice(_FILL_C)).replace(
+                "{x}", rng.choice(_FILL_X))
+            # noise: shuffle-in a few random words
+            words = t.split()
+            if rng.random() < 0.5:
+                words.insert(rng.randrange(len(words)), rng.choice(
+                    ["please", "asap", "thanks", "urgent", "note"]))
+            data.append((" ".join(words), label))
+    rng.shuffle(data)
+    return data
+
+
+class NgramClassifier:
+    def __init__(self, params=None):
+        self.params = params
+        self._predict = jax.jit(self._logits)
+
+    @staticmethod
+    def _logits(params, x):
+        return x @ params["w"] + params["b"]
+
+    def classify(self, text: str) -> str:
+        x = jnp.asarray(featurize(text))[None]
+        return CLASSES[int(jnp.argmax(self._predict(self.params, x)[0]))]
+
+    def probs(self, text: str):
+        x = jnp.asarray(featurize(text))[None]
+        return jax.nn.softmax(self._predict(self.params, x)[0])
+
+
+def train_classifier(seed: int = 0, steps: int = 300,
+                     n_per_class: int = 200) -> NgramClassifier:
+    data = synth_corpus(n_per_class, seed)
+    X = np.stack([featurize(t) for t, _ in data])
+    y = np.array([l for _, l in data], np.int32)
+    params = {"w": jnp.zeros((DIM, len(CLASSES)), jnp.float32),
+              "b": jnp.zeros((len(CLASSES),), jnp.float32)}
+    ocfg = optim.AdamWConfig(lr=0.05, weight_decay=1e-4, warmup_steps=10,
+                             total_steps=steps, clip_norm=10.0)
+    state = optim.init_state(ocfg, params)
+
+    @jax.jit
+    def step(params, state, xb, yb):
+        def loss(p):
+            logits = xb @ p["w"] + p["b"]
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            ll = jnp.take_along_axis(logits, yb[:, None], 1)[:, 0]
+            return (lse - ll).mean()
+        l, g = jax.value_and_grad(loss)(params)
+        params, state, _ = optim.apply_updates(ocfg, params, g, state)
+        return params, state, l
+
+    Xj, yj = jnp.asarray(X), jnp.asarray(y)
+    for i in range(steps):
+        params, state, l = step(params, state, Xj, yj)
+    clf = NgramClassifier(params)
+    acc = float((jnp.argmax(Xj @ params["w"] + params["b"], -1) == yj).mean())
+    clf.train_accuracy = acc
+    return clf

@@ -1,0 +1,127 @@
+"""Vectorized WAVES routing as a jit-compiled JAX program.
+
+The paper routes one request at a time on a client CPU; inside a TPU serving
+framework the same decision runs as a batched (requests x islands) kernel —
+thousands of routing decisions per scheduling tick, fused into the serving
+step. The scalar Algorithm-1 path in ``waves.py`` is the oracle; property
+tests assert this batched router is decision-equivalent.
+
+Island/request features are packed into flat arrays; see pack_islands /
+pack_requests. The router returns (assignment, feasible); assignment[i] is
+an island index or -1.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+BIG = 1e30
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["privacy", "cost", "latency", "capacity", "trust",
+                      "tier", "unbounded", "datasets", "alive"],
+         meta_fields=[])
+@dataclass(frozen=True)
+class IslandTable:
+    privacy: jnp.ndarray        # (n,)
+    cost: jnp.ndarray           # (n,) $
+    latency: jnp.ndarray        # (n,) ms
+    capacity: jnp.ndarray       # (n,) R_j(t)
+    trust: jnp.ndarray          # (n,)
+    tier: jnp.ndarray           # (n,) int
+    unbounded: jnp.ndarray      # (n,) bool
+    datasets: jnp.ndarray       # (n, n_datasets) bool
+    alive: jnp.ndarray          # (n,) bool
+
+
+def pack_islands(islands, dataset_ids, tide, trust_mode="min"):
+    idx = {d: i for i, d in enumerate(dataset_ids)}
+    ds = np.zeros((len(islands), max(len(dataset_ids), 1)), bool)
+    for j, isl in enumerate(islands):
+        for d in isl.datasets:
+            if d in idx:
+                ds[j, idx[d]] = True
+    return IslandTable(
+        privacy=jnp.array([i.privacy for i in islands], jnp.float32),
+        cost=jnp.array([i.cost_per_request for i in islands], jnp.float32),
+        latency=jnp.array([tide.effective_latency_ms(i) for i in islands],
+                          jnp.float32),
+        capacity=jnp.array([tide.capacity(i.island_id) for i in islands],
+                           jnp.float32),
+        trust=jnp.array([i.trust(trust_mode) for i in islands], jnp.float32),
+        tier=jnp.array([i.tier for i in islands], jnp.int32),
+        unbounded=jnp.array([i.unbounded for i in islands], bool),
+        datasets=jnp.asarray(ds),
+        alive=jnp.ones((len(islands),), bool),
+    )
+
+
+def pack_requests(sens, priority_gate, deadline_ms=None, dataset=None,
+                  personal_only=None, n_datasets=1):
+    """sens (m,), priority_gate (m,) capacity thresholds per request,
+    dataset (m,) int ids (-1 = none), personal_only (m,) bool (primary
+    tier: Sec IX-B local-regardless-of-pressure semantics)."""
+    m = len(sens)
+    return {
+        "sens": jnp.asarray(sens, jnp.float32),
+        "gate": jnp.asarray(priority_gate, jnp.float32),
+        "deadline": (jnp.asarray(deadline_ms, jnp.float32)
+                     if deadline_ms is not None
+                     else jnp.full((m,), jnp.inf, jnp.float32)),
+        "dataset": (jnp.asarray(dataset, jnp.int32) if dataset is not None
+                    else jnp.full((m,), -1, jnp.int32)),
+        "personal_only": (jnp.asarray(personal_only, bool)
+                          if personal_only is not None
+                          else jnp.zeros((m,), bool)),
+    }
+
+
+@partial(jax.jit, static_argnames=("mode",))
+def route_batch(tbl: IslandTable, reqs, weights, *, mode="scalarized",
+                budget=jnp.inf, min_trust=0.0, cost_scale=0.05,
+                latency_scale=2000.0):
+    """Returns (assign (m,) int32 [-1 infeasible], feasible (m,) bool,
+    score matrix (m,n))."""
+    w1, w2, w3 = weights
+    sens = reqs["sens"][:, None]                       # (m,1)
+    ok = tbl.alive[None, :]
+    ok &= tbl.privacy[None, :] >= sens                 # hard privacy
+    cap_ok = tbl.unbounded[None, :] | (
+        tbl.capacity[None, :] >= reqs["gate"][:, None])
+    ok &= cap_ok
+    ok &= tbl.latency[None, :] <= reqs["deadline"][:, None]
+    ok &= tbl.cost[None, :] <= budget
+    ok &= tbl.trust[None, :] >= min_trust
+    ok &= jnp.where(reqs["personal_only"][:, None],
+                    tbl.tier[None, :] == 1, True)
+    has_ds = reqs["dataset"] >= 0
+    ds_hit = tbl.datasets.T[jnp.maximum(reqs["dataset"], 0)]   # (m, n)
+    ok &= jnp.where(has_ds[:, None], ds_hit, True)
+
+    cn = jnp.minimum(tbl.cost / cost_scale, 1.0)
+    ln = jnp.minimum(tbl.latency / latency_scale, 1.0)
+    if mode == "constraint":
+        score = jnp.broadcast_to(ln[None, :], ok.shape)
+    else:
+        score = jnp.broadcast_to(
+            (w1 * cn + w2 * ln + w3 * (1.0 - tbl.privacy))[None, :], ok.shape)
+    masked = jnp.where(ok, score, BIG)
+    assign = jnp.argmin(masked, axis=1).astype(jnp.int32)
+    feasible = jnp.any(ok, axis=1)
+    assign = jnp.where(feasible, assign, -1)
+    return assign, feasible, masked
+
+
+def pareto_front(tbl: IslandTable):
+    """Non-dominated islands in (cost, latency, 1-privacy) space."""
+    objs = jnp.stack([tbl.cost, tbl.latency, 1.0 - tbl.privacy], axis=1)
+    le = jnp.all(objs[:, None, :] <= objs[None, :, :], axis=-1)
+    lt = jnp.any(objs[:, None, :] < objs[None, :, :], axis=-1)
+    dominated = jnp.any(le & lt, axis=0)  # someone dominates j
+    return ~dominated

@@ -1,0 +1,152 @@
+"""TIDE — Temporal Island Demand Evaluator (paper Sec IX).
+
+Monitors per-island utilization and computes available capacity
+
+    R(t) = 1 - max(cpu, gpu, mem)                       (Eq. 3)
+
+with user-configurable buffers (conservative 30% / moderate 20% /
+aggressive 10%), hysteresis-based fallback (out below 70%, back above 80%)
+to prevent route flapping, EWMA-based exhaustion prediction, and the
+priority-tier gates (primary always-local, secondary R>50%, burstable
+R>80%).
+
+Real phones/NAS/cloud don't exist in this container, so utilization is a
+simulated process: requests add load proportional to their work estimate
+and decay over a virtual clock. A crashed TIDE fails conservative:
+R_local = 0 (resources exhausted).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+# Paper Sec IX-A, implemented literally: with buffer b, route to cloud when
+# local capacity R < 1-b (conservative 30% -> R<0.70, moderate 20% -> R<0.80,
+# aggressive 10% -> R<0.90).
+BUFFERS = {"conservative": 0.30, "moderate": 0.20, "aggressive": 0.10}
+
+# Sec IX-C hysteresis: fall back below the buffer threshold, recover only
+# DEAD_ZONE above it (paper's 70%/80% pair = conservative buffer + 10%).
+DEAD_ZONE = 0.10
+
+# Sec IX-B priority-tier gates: secondary local if R>50%, burstable if R>80%
+TIER_GATES = {"primary": 0.0, "secondary": 0.50, "burstable": 0.80}
+
+
+@dataclass
+class LoadState:
+    cpu: float = 0.05
+    gpu: float = 0.0
+    mem: float = 0.10
+    inflight: float = 0.0          # active work units
+    ewma_r: float = 1.0
+    ewma_slope: float = 0.0
+    local_ok: bool = True          # hysteresis state
+    last_t: float = 0.0
+
+
+class TIDE:
+    def __init__(self, registry, buffer: str = "moderate",
+                 crashed: bool = False, decay_s: float = 2.0,
+                 monitor_interval_s: float = 1.0):
+        self.registry = registry
+        self.buffer = buffer
+        self.crashed = crashed
+        self.decay_s = decay_s
+        self.monitor_interval_s = monitor_interval_s  # paper: 1s sampling
+        self.state: dict[str, LoadState] = {}
+        self.clock: float = 0.0
+
+    # ------------------------------------------------------------ process
+    def _st(self, island_id: str) -> LoadState:
+        return self.state.setdefault(island_id, LoadState())
+
+    def advance(self, dt: float):
+        """Advance the virtual clock; load decays exponentially."""
+        self.clock += dt
+        k = math.exp(-dt / self.decay_s)
+        for st in self.state.values():
+            st.cpu = 0.05 + (st.cpu - 0.05) * k
+            st.gpu *= k
+            st.mem = 0.10 + (st.mem - 0.10) * k
+            st.inflight *= k
+
+    def add_load(self, island_id: str, work: float):
+        """Account a request's work on an island (bounded islands only)."""
+        island = self.registry.get(island_id)
+        if island.unbounded:
+            return
+        st = self._st(island_id)
+        w = work / max(island.capacity_units, 1e-6)
+        st.gpu = min(1.0, st.gpu + 0.8 * w)
+        st.cpu = min(1.0, st.cpu + 0.3 * w)
+        st.mem = min(1.0, st.mem + 0.2 * w)
+        st.inflight += w
+
+    # ----------------------------------------------------------- capacity
+    def capacity(self, island_id: str) -> float:
+        """R(t) = 1 - max(cpu, gpu, mem).  Crashed TIDE -> 0 (conservative)."""
+        if self.crashed:
+            return 0.0
+        island = self.registry.get(island_id)
+        if island.unbounded:
+            return 1.0  # HORIZON: infinite capacity
+        st = self._st(island_id)
+        r = 1.0 - max(st.cpu, st.gpu, st.mem)
+        # EWMA + slope for exhaustion prediction
+        a = 0.3
+        prev = st.ewma_r
+        st.ewma_r = (1 - a) * st.ewma_r + a * r
+        st.ewma_slope = (1 - a) * st.ewma_slope + a * (st.ewma_r - prev)
+        return r
+
+    def threshold(self, priority: str = "secondary") -> float:
+        """Minimum capacity to accept a request locally. The Sec IX-B tier
+        gates (primary 0 / secondary 0.50 / burstable 0.80) are the floors at
+        the default *moderate* buffer; the buffer knob shifts them:
+        conservative relaxes by 0.10 (keep more work local), aggressive
+        tightens by 0.10 (protect responsiveness), exactly reproducing the
+        paper's 70/80/90 ladder for the burstable tier."""
+        if priority == "primary":
+            return 0.0
+        gate = TIER_GATES.get(priority, TIER_GATES["secondary"])
+        shift = (1.0 - BUFFERS[self.buffer]) - 0.80
+        return float(min(max(gate + shift, 0.0), 0.95))
+
+    def admits(self, island_id: str, priority: str = "secondary") -> bool:
+        island = self.registry.get(island_id)
+        if island.unbounded:
+            return True
+        if priority == "primary":
+            return True  # primary may queue locally, never bounced
+        r = self.capacity(island_id)
+        st = self._st(island_id)
+        req = self.threshold(priority)
+        if st.local_ok:
+            if r < req:          # fall back
+                st.local_ok = False
+                return False
+            return True
+        # fallen back: require the recovery threshold (dead zone) to return
+        if r >= min(req + DEAD_ZONE, 0.99):
+            st.local_ok = True
+            return True
+        return False
+
+    def effective_latency_ms(self, island) -> float:
+        """Queueing-aware latency: base RTT+inference inflated by inflight
+        work on bounded islands. This is what makes the paper's
+        'latency-greedy routes to cloud' failure mode reproducible: a loaded
+        laptop stops being the fastest endpoint."""
+        if island.unbounded or self.crashed:
+            return island.latency_ms
+        st = self._st(island.island_id)
+        return island.latency_ms * (1.0 + 2.0 * st.inflight)
+
+    def predict_exhaustion_s(self, island_id: str):
+        """Seconds until R hits 0 at the current EWMA slope (None if
+        capacity is stable or growing)."""
+        st = self._st(island_id)
+        if st.ewma_slope >= -1e-6:
+            return None
+        return max(0.0, st.ewma_r / -st.ewma_slope) * self.monitor_interval_s

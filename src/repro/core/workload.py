@@ -1,0 +1,81 @@
+"""Workload generators for the paper's scenarios (Sec I, III-D, XI).
+
+The healthcare mix (Scenario 4 / XI): 1000 daily queries — 40%
+high-sensitivity (local per HIPAA), 35% moderate (private edge tolerable),
+25% low (public cloud acceptable). Query text is generated from templates so
+MIST's regex + classifier actually fire on realistic content.
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass
+
+from repro.core.waves import Request
+
+_HIGH = [
+    "Analyze treatment options for {age}-year-old diabetic patient {name} with elevated HbA1c",
+    "Patient {name}, MRN: {mrn}, presents with hypertension; adjust lisinopril dosage",
+    "Summarize lab results for patient {name}, SSN {ssn}, diagnosed with asthma",
+    "Draft a referral for {name} (DOB: 1979-03-{dd}) regarding chemotherapy schedule",
+    "Patient {name} reports depression symptoms; review sertraline treatment plan",
+]
+_MODERATE = [
+    "Search medical literature for metaanalyses on statin efficacy",
+    "Summarize our internal review of the oncology unit roadmap",
+    "Draft meeting notes for the clinical ops team retro",
+    "What does our team protocol say about triage escalation",
+    "Compare insulin pump vendors for the procurement draft",
+]
+_LOW = [
+    "What are common diabetes complications",
+    "Explain how vaccines train the immune system",
+    "General tips for improving sleep quality",
+    "What is the recommended daily water intake",
+    "How does blood pressure medication work in general",
+]
+
+_NAMES = ["John Doe", "Alice Johnson", "Maria Garcia", "Wei Chen", "Priya Patel"]
+
+
+def healthcare_workload(n: int = 1000, seed: int = 0,
+                        mix=(0.40, 0.35, 0.25)):
+    """Returns list of (Request, true_tier) where true_tier is the paper's
+    intended placement: 'high'|'moderate'|'low'."""
+    rng = random.Random(seed)
+    out = []
+    for _ in range(n):
+        u = rng.random()
+        if u < mix[0]:
+            t = rng.choice(_HIGH)
+            kind, prio = "high", "primary"
+        elif u < mix[0] + mix[1]:
+            t = rng.choice(_MODERATE)
+            kind, prio = "moderate", "secondary"
+        else:
+            t = rng.choice(_LOW)
+            kind, prio = "low", "burstable"
+        q = t.format(age=rng.randint(25, 80), name=rng.choice(_NAMES),
+                     mrn=rng.randint(10 ** 5, 10 ** 6),
+                     ssn=f"{rng.randint(100,999)}-{rng.randint(10,99)}-{rng.randint(1000,9999)}",
+                     dd=rng.randint(10, 28))
+        out.append((Request(query=q, priority=prio, user=f"u{rng.randint(0,3)}"),
+                    kind))
+    return out
+
+
+def legal_workload(n: int = 200, seed: int = 0):
+    """Scenario C: all case-law queries require the firm's vector index."""
+    rng = random.Random(seed)
+    temps = [
+        "Find precedents for breach of fiduciary duty, case no: {x}",
+        "Privileged and confidential: summarize deposition of {name}",
+        "Retrieve similar contracts to the {org} asset purchase agreement",
+    ]
+    out = []
+    for _ in range(n):
+        q = rng.choice(temps).format(
+            x=f"22-cv-{rng.randint(1000,9999)}", name=rng.choice(_NAMES),
+            org=rng.choice(["Acme Corp", "Globex LLC", "Initech Inc"]))
+        out.append((Request(query=q, dataset="caselaw-10tb",
+                            priority="secondary"), "high"))
+    return out

@@ -1,0 +1,21 @@
+"""Pallas TPU kernels (+ jit wrappers in ops.py, oracles in ref.py).
+
+``enabled()`` gates the model-layer fast path: set REPRO_PALLAS=1 (or call
+``enable(True)``) to route attention/SSD through the Pallas kernels — native
+on TPU, interpret mode elsewhere. The portable XLA implementations remain
+the default (and the dry-run path).
+"""
+import os
+
+_FORCED = None
+
+
+def enable(flag: bool):
+    global _FORCED
+    _FORCED = bool(flag)
+
+
+def enabled() -> bool:
+    if _FORCED is not None:
+        return _FORCED
+    return os.environ.get("REPRO_PALLAS", "0") == "1"

@@ -1,0 +1,101 @@
+"""GQA decode attention Pallas TPU kernel: ONE query token per sequence
+against a (possibly partially filled) KV cache.
+
+Grid (B, Hkv, k_blocks): each program attends the G query heads of one KV
+head over one cache block; the online-softmax state lives in VMEM scratch
+across the sequential k dimension. ``valid_len`` arrives via scalar prefetch
+(SMEM) and masks unwritten cache slots — whole blocks past the fill level
+are predicated off entirely, so decode cost tracks the *filled* cache, not
+its capacity.
+
+Block size defaults to 512 cache rows: at D=128 a (512, D) bf16 tile is
+128 KiB — two of those (K and V) plus the (G, D) accumulator keep VMEM
+pressure negligible while amortizing HBM->VMEM DMA.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _kernel(valid_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale, bk, nk):
+    ki = pl.program_id(2)
+    valid = valid_ref[0]
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)          # (G, D)
+        k = k_ref[0, :, 0].astype(jnp.float32)       # (bk, D)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+        slot = ki * bk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(slot < valid, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+        acc_ref[...] = (acc_ref[...] * corr[:, None] +
+                        jax.lax.dot_general(p, v, (((1,), (0,)), ((), ()))))
+        m_ref[...] = m_new
+
+    # skip whole blocks beyond the cache fill level
+    pl.when(ki * bk < valid)(_compute)
+
+    @pl.when(ki == nk - 1)
+    def _final():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def decode_attention(q, k, v, valid_len, scale=None, block_k=512,
+                     interpret=True):
+    """q (B, H, D); k/v (B, S, Hkv, D); valid_len scalar int32 (filled
+    slots). Returns (B, H, D)."""
+    B, H, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    bk = min(block_k, S)
+    assert S % bk == 0
+    nk = S // bk
+    qg = q.reshape(B, Hkv, G, D)
+    valid = jnp.asarray(valid_len, jnp.int32).reshape(1)
+
+    kern = functools.partial(_kernel, scale=scale, bk=bk, nk=nk)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, Hkv, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, ki, valid: (b, h, 0, 0)),
+            pl.BlockSpec((1, bk, 1, D), lambda b, h, ki, valid: (b, ki, h, 0)),
+            pl.BlockSpec((1, bk, 1, D), lambda b, h, ki, valid: (b, ki, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D),
+                               lambda b, h, ki, valid: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        interpret=interpret,
+    )(valid, qg, k, v)
+    return out.reshape(B, H, D)

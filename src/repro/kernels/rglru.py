@@ -1,0 +1,64 @@
+"""RG-LRU linear-recurrence Pallas TPU kernel.
+
+h_t = a_t * h_{t-1} + b_t, elementwise over the recurrence width. The
+recurrence is sequential in t but embarrassingly parallel over (batch,
+channel): grid (B, channel_blocks, seq_blocks) with the seq dimension
+innermost/sequential and the running h carried in VMEM scratch. Channel
+blocks of 512 lanes keep each (bs, bl) tile VPU-shaped (8x128 registers);
+this is a bandwidth-bound kernel, so tiles are sized to stream a,b through
+VMEM once with no re-reads.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ref, b_ref, h0_ref, o_ref, h_ref, *, bs):
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        h_ref[...] = h0_ref[0].astype(jnp.float32)
+
+    a = a_ref[0].astype(jnp.float32)   # (bs, bl)
+    b = b_ref[0].astype(jnp.float32)
+
+    def body(t, h):
+        h = a[t] * h + b[t]
+        o_ref[0, t] = h.astype(o_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, bs, body, h_ref[...])
+    h_ref[...] = h
+
+
+def rglru_scan(a, b, h0=None, block_seq=256, block_lanes=512,
+               interpret=True):
+    """a, b (B, S, C); h0 optional (B, C). Returns h (B, S, C)."""
+    B, S, C = a.shape
+    if h0 is None:
+        h0 = jnp.zeros((B, C), a.dtype)
+    bs = min(block_seq, S)
+    bl = min(block_lanes, C)
+    assert S % bs == 0 and C % bl == 0
+    ns, nl = S // bs, C // bl
+
+    kern = functools.partial(_kernel, bs=bs)
+    return pl.pallas_call(
+        kern,
+        grid=(B, nl, ns),
+        in_specs=[
+            pl.BlockSpec((1, bs, bl), lambda bi, li, si: (bi, si, li)),
+            pl.BlockSpec((1, bs, bl), lambda bi, li, si: (bi, si, li)),
+            pl.BlockSpec((1, bl), lambda bi, li, si: (bi, li)),
+        ],
+        out_specs=pl.BlockSpec((1, bs, bl), lambda bi, li, si: (bi, si, li)),
+        out_shape=jax.ShapeDtypeStruct((B, S, C), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bl,), jnp.float32)],
+        interpret=interpret,
+    )(a, b, h0)

@@ -1,0 +1,290 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh).
+
+This file MUST set XLA_FLAGS before any other import (jax locks the device
+count on first init), hence the lines above. Do not import this module from
+tests/benches — run it as ``python -m repro.launch.dryrun``.
+
+For each combination it records FLOPs/bytes (cost_analysis), per-device
+memory (memory_analysis) and per-collective bytes (parsed from the optimized
+HLO) into results/dryrun/*.json; benchmarks/roofline.py turns those into the
+three-term roofline table in EXPERIMENTS.md.
+"""
+import argparse
+import json
+import math
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ARCH_IDS, SHAPES, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import decode_window, input_specs, needs_sliding_window
+from repro.models.model import get_model
+from repro.models.steps import make_prefill_step, make_serve_step, make_train_step
+from repro.sharding import axis_rules, named_sharding, tree_shardings
+from repro.training import optim
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+# ------------------------------------------------------------ HLO parsing
+
+_SHAPE_RE = re.compile(r"(bf16|f32|f16|s32|u32|s8|u8|f64|s64|u64|pred|s16|u16)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|\S+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=(\{\{[^}]*\}[^,]*\}|\[[0-9,]+\]<=\[[0-9,]+\])")
+
+_DT_BYTES = {"bf16": 2, "f16": 2, "f32": 4, "f64": 8, "s32": 4, "u32": 4,
+             "s8": 1, "u8": 1, "pred": 1, "s64": 8, "u64": 8, "s16": 2,
+             "u16": 2}
+
+
+def _shape_bytes(dt, dims):
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DT_BYTES[dt]
+
+
+def _group_size(line, n_devices):
+    m = _GROUPS_RE.search(line)
+    if not m:
+        return n_devices
+    g = m.group(1)
+    if g.startswith("{{"):
+        first = g[2:].split("}")[0]
+        return max(1, first.count(",") + 1)
+    # iota form: [a,b]<=[n] -> group size is the last dim of the lhs
+    dims = [int(x) for x in g[1:g.index("]")].split(",")]
+    return dims[-1] if dims else n_devices
+
+
+def parse_collectives(hlo_text: str, n_devices: int):
+    """Per-device collective bytes, ring estimates per op kind."""
+    out = {}
+    total = 0.0
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1)
+        shapes = _SHAPE_RE.findall(line)
+        if not shapes:
+            continue
+        out_bytes = _shape_bytes(*shapes[0])
+        n = _group_size(line, n_devices)
+        frac = (n - 1) / max(n, 1)
+        if kind == "all-reduce":
+            moved = 2 * out_bytes * frac
+        elif kind == "all-gather":
+            moved = out_bytes * frac
+        elif kind == "reduce-scatter":
+            # output is the scattered shard; input ~ out*n
+            moved = out_bytes * n * frac
+        elif kind == "all-to-all":
+            moved = out_bytes * frac
+        else:  # collective-permute
+            moved = out_bytes
+        rec = out.setdefault(kind, {"count": 0, "bytes": 0.0})
+        rec["count"] += 1
+        rec["bytes"] += moved
+        total += moved
+    return out, total
+
+
+# ------------------------------------------------------------- the dry run
+
+def build_step(cfg, shape, model, opt_dtype="float32"):
+    kind, inp = input_specs(cfg, shape)
+    window = decode_window(cfg, shape)
+    if kind == "train":
+        opt_cfg = optim.AdamWConfig(
+            factored=cfg.num_experts >= 64,  # 1T-class MoE: factored 2nd moment
+            state_dtype=opt_dtype)
+        fn = make_train_step(model, opt_cfg, remat=True)
+        return kind, fn, inp, opt_cfg, window
+    if kind == "prefill":
+        fn = make_prefill_step(model, window=window)
+        return kind, fn, inp, None, window
+    fn = make_serve_step(model, window=window)
+    return kind, fn, inp, None, window
+
+
+def lower_one(arch: str, shape_name: str, multi_pod: bool,
+              mesh_shape=None, fsdp=False, kv_dtype="bfloat16",
+              opt_dtype="float32"):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod, shape=mesh_shape)
+    n_dev = math.prod(mesh.shape.values())
+    model = get_model(cfg)
+
+    with axis_rules(mesh):
+        kind, step, inp, opt_cfg, window = build_step(cfg, shape, model,
+                                                      opt_dtype=opt_dtype)
+        params_abs = model.abstract()
+        params_axes = model.axes()
+        if fsdp:
+            from repro.sharding import apply_fsdp
+            params_axes = apply_fsdp(params_abs, params_axes, mesh)
+        params_sh = tree_shardings(params_abs, params_axes, mesh)
+        inp_sh = {k: named_sharding(v.shape, ("batch",) + (None,) * (v.ndim - 1))
+                  if v.ndim else named_sharding((), ()) for k, v in inp.items()}
+
+        if kind == "train":
+            opt_abs = jax.eval_shape(lambda p: optim.init_state(opt_cfg, p),
+                                     params_abs)
+            opt_sh = tree_shardings(
+                opt_abs, optim.state_axes(opt_cfg, params_axes), mesh)
+            jf = jax.jit(step,
+                         in_shardings=(params_sh, opt_sh, inp_sh),
+                         out_shardings=(params_sh, opt_sh, None))
+            lowered = jf.lower(params_abs, opt_abs, inp)
+        elif kind == "prefill":
+            cache_abs = model.init_cache(shape.global_batch, shape.seq_len,
+                                         window=window, abstract=True)
+            cache_sh = tree_shardings(
+                cache_abs, model.cache_axes(shape.global_batch, shape.seq_len,
+                                            window=window), mesh)
+            jf = jax.jit(step,
+                         in_shardings=(params_sh, cache_sh, inp_sh),
+                         out_shardings=(None, cache_sh))
+            lowered = jf.lower(params_abs, cache_abs, inp)
+        else:  # decode
+            cache_abs = model.init_cache(shape.global_batch, shape.seq_len,
+                                         window=window, abstract=True,
+                                         dtype=jnp.dtype(kv_dtype))
+            cache_sh = tree_shardings(
+                cache_abs, model.cache_axes(shape.global_batch, shape.seq_len,
+                                            window=window), mesh)
+            tok_sh = named_sharding(inp["token"].shape, ("batch", None))
+            jf = jax.jit(step,
+                         in_shardings=(params_sh, cache_sh, tok_sh, None),
+                         out_shardings=(None, cache_sh))
+            lowered = jf.lower(params_abs, cache_abs, inp["token"], inp["pos"])
+    return lowered, n_dev, kind, window
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
+            mesh_shape=None, fsdp=False, kv_dtype="bfloat16", tag_extra="",
+            opt_dtype="float32"):
+    if mesh_shape is not None:
+        base = f"pod{mesh_shape[0]}x{mesh_shape[1]}"
+        mesh_name = ("pod2x" + base[3:]) if multi_pod else base
+    else:
+        mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    tag = f"{arch}__{shape_name}__{mesh_name}{tag_extra}"
+    out_path = out_dir / f"{tag}.json"
+    if out_path.exists():
+        prev = json.loads(out_path.read_text())
+        if prev.get("ok"):
+            print(f"[skip] {tag}")
+            return True
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    t0 = time.time()
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "fsdp": fsdp, "kv_dtype": kv_dtype,
+           "variant": ("sliding-window" if needs_sliding_window(cfg, shape)
+                       else "native")}
+    try:
+        lowered, n_dev, kind, window = lower_one(
+            arch, shape_name, multi_pod, mesh_shape=mesh_shape, fsdp=fsdp,
+            kv_dtype=kv_dtype, opt_dtype=opt_dtype)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        ca = compiled.cost_analysis() or {}
+        rec.update({
+            "kind": kind, "window": window, "n_devices": n_dev,
+            "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+            "flops": float(ca.get("flops", -1)),
+            "bytes_accessed": float(ca.get("bytes accessed", -1)),
+            "transcendentals": float(ca.get("transcendentals", -1)),
+        })
+        try:
+            ma = compiled.memory_analysis()
+            rec["memory"] = {
+                "argument_bytes": getattr(ma, "argument_size_in_bytes", None),
+                "output_bytes": getattr(ma, "output_size_in_bytes", None),
+                "temp_bytes": getattr(ma, "temp_size_in_bytes", None),
+                "generated_code_bytes": getattr(
+                    ma, "generated_code_size_in_bytes", None),
+            }
+        except Exception as e:  # pragma: no cover
+            rec["memory"] = {"error": str(e)}
+        try:
+            hlo = compiled.as_text()
+            colls, total = parse_collectives(hlo, n_dev)
+            rec["collectives"] = colls
+            rec["collective_bytes"] = total
+            rec["hlo_bytes"] = len(hlo)
+        except Exception as e:  # pragma: no cover
+            rec["collectives"] = {"error": str(e)}
+        rec["ok"] = True
+        print(f"[ok]   {tag}  lower={t_lower:.0f}s compile={t_compile:.0f}s "
+              f"flops={rec['flops']:.3g} coll={rec.get('collective_bytes', 0):.3g}B")
+    except Exception as e:
+        rec["ok"] = False
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[FAIL] {tag}: {rec['error'][:200]}")
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps(rec, indent=1))
+    return rec.get("ok", False)
+
+
+def pairs_for(arch: str):
+    cfg = get_config(arch)
+    for sname in SHAPES:
+        yield arch, sname
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--out", default=str(RESULTS))
+    ap.add_argument("--mesh-shape", default=None,
+                    help="per-pod data x model, e.g. 64x4 (perf experiments)")
+    ap.add_argument("--fsdp", action="store_true",
+                    help="ZeRO-3-style weight sharding over the data axis")
+    ap.add_argument("--kv-dtype", default="bfloat16",
+                    help="decode cache dtype (e.g. float8_e4m3fn)")
+    ap.add_argument("--tag", default="", help="extra tag for the result file")
+    ap.add_argument("--opt-dtype", default="float32",
+                    help="optimizer state dtype (bfloat16 halves m/v memory)")
+    args = ap.parse_args()
+    mesh_shape = (tuple(int(x) for x in args.mesh_shape.split("x"))
+                  if args.mesh_shape else None)
+    out_dir = Path(args.out)
+    archs = [args.arch] if args.arch else ARCH_IDS
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    n_ok = n_fail = 0
+    for arch in archs:
+        for sname in shapes:
+            for mp in meshes:
+                ok = run_one(arch, sname, mp, out_dir,
+                             mesh_shape=mesh_shape, fsdp=args.fsdp,
+                             kv_dtype=args.kv_dtype, tag_extra=args.tag,
+                             opt_dtype=args.opt_dtype)
+                n_ok += ok
+                n_fail += (not ok)
+    print(f"done: {n_ok} ok, {n_fail} failed")
+
+
+if __name__ == "__main__":
+    main()

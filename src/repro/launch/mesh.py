@@ -1,0 +1,31 @@
+"""Production mesh factory.
+
+A FUNCTION, not a module-level constant: importing this module must never
+touch jax device state (the dry-run sets XLA_FLAGS before first jax init;
+smoke tests must keep seeing 1 device).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False, shape=None):
+    """Default production meshes: (16,16)=(data,model) single pod,
+    (2,16,16)=(pod,data,model) multi-pod. ``shape`` overrides the per-pod
+    (data, model) factorization for perf experiments (256 chips/pod)."""
+    if shape is not None:
+        assert shape[0] * shape[1] == 256, "one pod = 256 chips"
+        if multi_pod:
+            return jax.make_mesh((2,) + tuple(shape),
+                                 ("pod", "data", "model"))
+        return jax.make_mesh(tuple(shape), ("data", "model"))
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many devices exist (tests/examples)."""
+    n = len(jax.devices())
+    assert data * model <= n, (data, model, n)
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,82 @@
+"""Serving driver: ``python -m repro.launch.serve --requests 50``.
+
+Boots a three-tier island mesh (personal laptop+phone, private edge, public
+cloud), serves a real reduced model on the laptop SHORE island, routes a
+healthcare workload through WAVES and prints the per-island distribution,
+privacy accounting and latency percentiles.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.configs.base import ARCH_IDS, get_config
+from repro.core.islands import (IslandRegistry, cloud_island, edge_island,
+                                personal_island)
+from repro.core.lighthouse import Lighthouse
+from repro.core.mist import MIST
+from repro.core.tide import TIDE
+from repro.core.waves import WAVES, Policy
+from repro.core.workload import healthcare_workload
+from repro.serving.engine import InferenceEngine, LocalModelServer
+
+
+def build_mesh(policy=None, buffer="moderate", classifier=None):
+    reg = IslandRegistry()
+    for isl in [
+        personal_island("laptop", latency_ms=120, capacity_units=3.0,
+                        models=("smoke",)),
+        personal_island("phone", latency_ms=250, capacity_units=0.5),
+        edge_island("home-nas", privacy=0.9, latency_ms=300,
+                    capacity_units=2.0),
+        edge_island("clinic-edge", privacy=0.8, latency_ms=450,
+                    datasets=("medlit",), capacity_units=6.0),
+        cloud_island("gpt4-api", privacy=0.4, cost=0.02, latency_ms=900),
+        cloud_island("claude-api", privacy=0.5, cost=0.015, latency_ms=800),
+    ]:
+        reg.register(isl, reg.attestation_token(isl.island_id))
+    mist = MIST(classifier=classifier)
+    tide = TIDE(reg, buffer=buffer)
+    lh = Lighthouse(reg)
+    for i in reg.all():
+        lh.heartbeat(i.island_id)
+    waves = WAVES(mist, tide, lh, policy or Policy())
+    return reg, waves
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m", choices=ARCH_IDS)
+    ap.add_argument("--requests", type=int, default=50)
+    ap.add_argument("--max-new-tokens", type=int, default=8)
+    ap.add_argument("--buffer", default="moderate",
+                    choices=("conservative", "moderate", "aggressive"))
+    ap.add_argument("--mode", default="scalarized",
+                    choices=("scalarized", "constraint"))
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--train-classifier", action="store_true",
+                    help="train the MIST stage-2 JAX classifier first")
+    args = ap.parse_args(argv)
+
+    clf = None
+    if args.train_classifier:
+        from repro.core.mist_model import train_classifier
+        clf = train_classifier(seed=args.seed)
+        print(f"MIST stage-2 classifier trained "
+              f"(train acc {clf.train_accuracy:.3f})")
+
+    reg, waves = build_mesh(Policy(mode=args.mode), args.buffer, clf)
+    cfg = get_config(args.arch).reduced()
+    servers = {"laptop": LocalModelServer(cfg, max_len=128, seed=args.seed),
+               "home-nas": LocalModelServer(cfg, max_len=128, seed=args.seed)}
+    eng = InferenceEngine(waves, reg, servers, seed=args.seed)
+
+    wl = healthcare_workload(args.requests, seed=args.seed)
+    for req, kind in wl:
+        eng.submit(req, max_new_tokens=args.max_new_tokens)
+    print(json.dumps(eng.stats(), indent=1))
+    return eng
+
+
+if __name__ == "__main__":
+    main()

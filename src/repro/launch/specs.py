@@ -1,0 +1,82 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+``input_specs(cfg, shape)`` returns the abstract inputs for the step function
+that the given input shape lowers: train_step for training shapes,
+prefill_step for prefill, serve_step (ONE token + KV/state cache) for decode
+shapes. Modality frontends are stubbed here: audio/vision configs get
+precomputed frame/patch embeddings of the right shape.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+
+# beyond-paper variant: ring-buffer sliding-window decode for full-attention
+# archs at 524k context (natively sub-quadratic archs don't need it)
+SLIDING_WINDOW = 8192
+LONG_SEQ = 524288
+
+
+def needs_sliding_window(cfg: ModelConfig, shape: InputShape) -> bool:
+    return shape.kind == "decode" and shape.seq_len >= LONG_SEQ and not cfg.subquadratic
+
+
+def decode_window(cfg: ModelConfig, shape: InputShape):
+    """Ring-buffer window to use for decode, or None for full cache."""
+    if needs_sliding_window(cfg, shape):
+        return SLIDING_WINDOW
+    return cfg.attn_window  # hybrid local attention windows apply always
+
+
+def batch_inputs(cfg: ModelConfig, batch: int, seq: int):
+    """Abstract full-sequence inputs (train/prefill)."""
+    i32 = jnp.int32
+    emb_dt = jnp.dtype(cfg.dtype)
+    if cfg.frontend == "audio":
+        return {"embeddings": jax.ShapeDtypeStruct((batch, seq, cfg.d_model),
+                                                   emb_dt)}
+    if cfg.frontend == "vision":
+        P = cfg.num_prefix_tokens
+        return {
+            "embeddings": jax.ShapeDtypeStruct((batch, P, cfg.d_model), emb_dt),
+            "tokens": jax.ShapeDtypeStruct((batch, seq - P), i32),
+        }
+    return {"tokens": jax.ShapeDtypeStruct((batch, seq), i32)}
+
+
+def label_len(cfg: ModelConfig, seq: int) -> int:
+    if cfg.frontend == "audio":
+        return seq
+    if cfg.frontend == "vision":
+        return seq - cfg.num_prefix_tokens
+    return seq
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape):
+    """Returns (kind, inputs dict of ShapeDtypeStructs)."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        inp = batch_inputs(cfg, B, S)
+        inp["labels"] = jax.ShapeDtypeStruct((B, label_len(cfg, S)), jnp.int32)
+        return "train", inp
+    if shape.kind == "prefill":
+        return "prefill", batch_inputs(cfg, B, S)
+    # decode: ONE new token at position S against a cache of size S
+    return "decode", {
+        "token": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def input_axes(cfg: ModelConfig, shape: InputShape):
+    """Logical axes for the abstract inputs (leading batch dim sharded)."""
+    kind, inp = input_specs(cfg, shape)
+    axes = {}
+    for k, v in inp.items():
+        if v.ndim == 0:
+            axes[k] = ()
+        else:
+            axes[k] = ("batch",) + (None,) * (v.ndim - 1)
+    return kind, axes

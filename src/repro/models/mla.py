@@ -1,0 +1,157 @@
+"""Multi-head Latent Attention (DeepSeek-V2) [arXiv:2405.04434].
+
+KV is compressed to a rank-``kv_lora_rank`` latent ``c`` plus a shared
+(MQA-style) RoPE key. The decode cache stores only ``ckr = concat(c,
+k_rope)`` — (512+64) values/token instead of 2*H*128.
+
+Decode modes:
+* ``absorbed`` (default) — fold W_uk into the query and W_uv after the
+  attention, so scores and outputs are computed directly in latent space:
+  q' = [q_nope @ W_uk^T, q_rope],  K' = [c, k_rope],  V' = c.
+  This makes MLA decode exactly MQA over the latent, so it reuses the
+  generic seq-sharded flash-decoding path on big meshes.
+* ``naive`` — re-expand K/V from the latent every step (numerical oracle).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import NEG_INF, attend_blocked, attend_naive
+from repro.models.layers import PSpec, apply_rope, rms_norm
+from repro.sharding import shard
+
+
+def mla_table(cfg):
+    d, H = cfg.d_model, cfg.num_heads
+    nd, rd, vd, r = (cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim,
+                     cfg.kv_lora_rank)
+    return {
+        "ln": PSpec((d,), (None,), "zeros"),
+        "wq": PSpec((d, H * (nd + rd)), (None, "heads")),
+        "w_dkv": PSpec((d, r), (None, None)),
+        "w_krope": PSpec((d, rd), (None, None)),
+        "kv_ln": PSpec((r,), (None,), "zeros"),
+        "w_uk": PSpec((r, H * nd), (None, "heads")),
+        "w_uv": PSpec((r, H * vd), (None, "heads")),
+        "wo": PSpec((H * vd, d), ("heads", None)),
+    }
+
+
+def mla_cache_spec(cfg, batch, max_len, window=None):
+    from repro.models.decode_sharded import use_seq_sharded
+    r, rd = cfg.kv_lora_rank, cfg.rope_head_dim
+    sh = (batch, max_len, 1, r + rd)
+    if use_seq_sharded(0, max_len):  # latent cache has no kv-head dim
+        ax = ("batch", "kv_seq", None, None)
+    else:
+        ax = ("batch", None, None, None)
+    return {"ckr": (sh, ax)}
+
+
+def _project_q(cfg, p, h, B):
+    H = cfg.num_heads
+    nd, rd = cfg.nope_head_dim, cfg.rope_head_dim
+    q = jnp.einsum("bsd,dq->bsq", h, p["wq"]).reshape(B, -1, H, nd + rd)
+    return q[..., :nd], q[..., nd:]
+
+
+def mla_apply(cfg, p, x, positions, *, mode, cache=None, window=None,
+              use_blocked=True, decode_mode="absorbed", triangular=True):
+    from repro.models.decode_sharded import (seq_sharded_decode,
+                                             use_seq_sharded)
+    B = x.shape[0]
+    H = cfg.num_heads
+    nd, rd, vd, r = (cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim,
+                     cfg.kv_lora_rank)
+    scale = (nd + rd) ** -0.5
+    h = rms_norm(x, p["ln"])
+    q_nope, q_rope = _project_q(cfg, p, h, B)
+    c = rms_norm(jnp.einsum("bsd,dr->bsr", h, p["w_dkv"]), p["kv_ln"])
+    k_rope_new = jnp.einsum("bsd,dr->bsr", h, p["w_krope"])
+
+    if mode == "full":
+        S = x.shape[1]
+        pos = positions
+        q_rope = apply_rope(q_rope, pos, cfg.rope_theta)
+        k_rope = apply_rope(k_rope_new[:, :, None, :], pos, cfg.rope_theta)
+        k_nope = jnp.einsum("bsr,rq->bsq", c, p["w_uk"]).reshape(B, S, H, nd)
+        v = jnp.einsum("bsr,rq->bsq", c, p["w_uv"]).reshape(B, S, H, vd)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope, (B, S, H, rd))], axis=-1)
+        q = shard(q, "batch", None, "heads", None)
+        k = shard(k, "batch", None, "heads", None)
+        if use_blocked and S > 1024:
+            o = attend_blocked(q, k, v, pos, pos, scale,
+                               skip_noncausal=triangular)
+        else:
+            o = attend_naive(q, k, v, pos, pos, scale)
+        new_cache = None
+        if cache is not None:
+            ckr = jnp.concatenate([c, k_rope[:, :, 0, :]], axis=-1)
+            ckr = ckr[:, :, None, :].astype(cache["ckr"].dtype)
+            new_cache = {"ckr": jax.lax.dynamic_update_slice(
+                cache["ckr"], ckr, (0, 0, 0, 0))}
+    else:  # decode
+        pos = positions
+        posv = jnp.zeros((1,), jnp.int32) + pos
+        q_rope = apply_rope(q_rope, posv, cfg.rope_theta)
+        k_rope_t = apply_rope(k_rope_new[:, :, None, :], posv,
+                              cfg.rope_theta)[:, :, 0, :]
+        ckr_new = jnp.concatenate([c, k_rope_t], axis=-1)[:, :, None, :]
+        ckr_new = ckr_new.astype(cache["ckr"].dtype)
+        wuk = p["w_uk"].reshape(r, H, nd)
+        # absorbed query: q' = [q_nope @ W_uk^T, q_rope]  (B,1,H,r+rd)
+        q_lat = jnp.einsum("bthn,rhn->bthr", q_nope.astype(jnp.float32),
+                           wuk.astype(jnp.float32))
+        q_abs = jnp.concatenate(
+            [q_lat, q_rope.astype(jnp.float32)], axis=-1).astype(x.dtype)
+
+        if use_seq_sharded(0, cache["ckr"].shape[1]):
+            v_cache = cache["ckr"][..., :r]
+            ckr_upd, _, o_lat = seq_sharded_decode(
+                cache["ckr"], v_cache, ckr_new, ckr_new[..., :r], q_abs,
+                pos, window, scale)
+            o_lat = o_lat.astype(jnp.float32)  # (B,1,H,r)
+        else:
+            ckr_upd = jax.lax.dynamic_update_slice(
+                cache["ckr"], ckr_new, (0, pos, 0, 0))
+            S = ckr_upd.shape[1]
+            valid = jnp.arange(S)[None, None, :] < (pos + 1)
+            kk = ckr_upd[:, :, 0, :].astype(jnp.float32)  # (B,S,r+rd)
+            if decode_mode == "absorbed":
+                s = jnp.einsum("bthd,bsd->bhs",
+                               q_abs.astype(jnp.float32), kk) * scale
+                s = jnp.where(valid, s, NEG_INF)
+                pr = jax.nn.softmax(s, axis=-1)
+                o_lat = jnp.einsum("bhs,bsr->bhr", pr, kk[..., :r])[:, None]
+            else:  # naive re-expansion oracle
+                cc = kk[..., :r].astype(h.dtype)
+                k_nope = jnp.einsum("bsr,rq->bsq", cc, p["w_uk"]).reshape(
+                    B, S, H, nd)
+                vv = jnp.einsum("bsr,rq->bsq", cc, p["w_uv"]).reshape(
+                    B, S, H, vd)
+                kf = jnp.concatenate(
+                    [k_nope, jnp.broadcast_to(kk[..., None, r:].astype(h.dtype),
+                                              (B, S, H, rd))], axis=-1)
+                qf = jnp.concatenate([q_nope, q_rope.astype(h.dtype)], axis=-1)
+                s = jnp.einsum("bthd,bshd->bhs", qf.astype(jnp.float32),
+                               kf.astype(jnp.float32)) * scale
+                s = jnp.where(valid, s, NEG_INF)
+                pr = jax.nn.softmax(s, axis=-1)
+                o = jnp.einsum("bhs,bshv->bhv", pr,
+                               vv.astype(jnp.float32))[:, None]
+                y = jnp.einsum("bsq,qd->bsd",
+                               o.reshape(B, 1, H * vd).astype(x.dtype), p["wo"])
+                return x + y, {"ckr": ckr_upd}
+
+        # absorbed output: o = (p . c) @ W_uv  per head
+        wuv = p["w_uv"].reshape(r, H, vd)
+        o = jnp.einsum("bthr,rhv->bthv", o_lat.reshape(B, 1, H, r),
+                       wuv.astype(jnp.float32))
+        o = o.astype(x.dtype)
+        new_cache = {"ckr": ckr_upd}
+
+    y = jnp.einsum("bsq,qd->bsd", o.reshape(B, o.shape[1], H * vd), p["wo"])
+    return x + y, new_cache

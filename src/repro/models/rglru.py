@@ -1,0 +1,122 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma) [arXiv:2402.19427].
+
+h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t),  a_t = exp(-c*softplus(L)*r_t)
+
+Train/prefill uses an associative scan (log-depth); decode is an O(1) state
+update. ``repro.kernels.rglru`` provides the Pallas TPU kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import PSpec, rms_norm
+from repro.models.ssm import causal_conv
+from repro.sharding import shard
+
+C_RGLRU = 8.0
+
+
+def rglru_table(cfg):
+    d, r, W = cfg.d_model, cfg.lru_width, cfg.conv_width
+    t = {
+        "ln": PSpec((d,), (None,), "zeros"),
+        "wx": PSpec((d, r), (None, "lru")),
+        "wy": PSpec((d, r), (None, "lru")),
+        "conv": PSpec((W, r), (None, "lru"), scale=0.5),
+        "lam": PSpec((r,), (None,), "lambda_init"),
+        "wo": PSpec((r, d), ("lru", None)),
+    }
+    nb = cfg.lru_diag_blocks
+    if nb:
+        # Griffin-faithful block-diagonal gates: sharding the block dim on
+        # the model axis keeps both gate matmuls entirely shard-local
+        # (no all-gather of the recurrence width; see EXPERIMENTS §Perf P5)
+        bs = r // nb
+        t["w_rg"] = PSpec((nb, bs, bs), ("lru", None, None),
+                          scale=bs ** -0.5)
+        t["w_ig"] = PSpec((nb, bs, bs), ("lru", None, None),
+                          scale=bs ** -0.5)
+    else:
+        t["w_rg"] = PSpec((r, r), (None, "lru"))
+        t["w_ig"] = PSpec((r, r), (None, "lru"))
+    return t
+
+
+def rglru_cache_spec(cfg, batch, max_len=None):
+    r, W = cfg.lru_width, cfg.conv_width
+    return {
+        "conv": ((batch, W - 1, r), ("batch", None, "lru")),
+        "h": ((batch, r), ("batch", "lru")),
+    }
+
+
+def rglru_gates(p, u):
+    """u (B,S,r) conv output -> (a fp32, gated fp32)."""
+    if p["w_rg"].ndim == 3:  # block-diagonal
+        B, S, r = u.shape
+        nb, bs, _ = p["w_rg"].shape
+        ub = u.reshape(B, S, nb, bs)
+        r_g = jax.nn.sigmoid(jnp.einsum("bsnk,nkj->bsnj", ub, p["w_rg"])
+                             .astype(jnp.float32)).reshape(B, S, r)
+        i_g = jax.nn.sigmoid(jnp.einsum("bsnk,nkj->bsnj", ub, p["w_ig"])
+                             .astype(jnp.float32)).reshape(B, S, r)
+    else:
+        r_g = jax.nn.sigmoid(jnp.einsum("bsr,rq->bsq", u, p["w_rg"])
+                             .astype(jnp.float32))
+        i_g = jax.nn.sigmoid(jnp.einsum("bsr,rq->bsq", u, p["w_ig"])
+                             .astype(jnp.float32))
+    log_a = -C_RGLRU * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r_g
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    gated = beta * i_g * u.astype(jnp.float32)
+    return a, gated
+
+
+def lru_scan(a, b, h0=None):
+    """h_t = a_t h_{t-1} + b_t over axis 1. a,b (B,S,r) fp32."""
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rglru_apply(cfg, p, x, positions, *, mode, cache=None):
+    """Returns (x + out, new_cache_or_None)."""
+    B = x.shape[0]
+    r, W = cfg.lru_width, cfg.conv_width
+    hin = rms_norm(x, p["ln"])
+    y_branch = jax.nn.gelu(jnp.einsum("bsd,dr->bsr", hin, p["wy"])
+                           .astype(jnp.float32))
+    pre = jnp.einsum("bsd,dr->bsr", hin, p["wx"])  # pre-conv
+    pre = shard(pre, "batch", None, "lru")
+
+    if mode == "full":
+        u = causal_conv(pre, p["conv"])
+        a, gated = rglru_gates(p, u)
+        h0 = cache["h"].astype(jnp.float32) if cache is not None else None
+        h = lru_scan(a, gated, h0)
+        new_cache = None
+        if cache is not None:
+            S = x.shape[1]
+            tail = pre[:, -(W - 1):, :] if S >= W - 1 else jnp.pad(
+                pre, ((0, 0), (W - 1 - S, 0), (0, 0)))
+            new_cache = {"conv": tail.astype(cache["conv"].dtype),
+                         "h": h[:, -1, :]}
+    else:  # decode
+        window = jnp.concatenate(
+            [cache["conv"].astype(pre.dtype), pre], axis=1)  # (B,W,r)
+        u = jnp.einsum("bwr,wr->br", window, p["conv"])[:, None, :]
+        a, gated = rglru_gates(p, u)
+        hprev = cache["h"].astype(jnp.float32)
+        h = (a[:, 0] * hprev + gated[:, 0])[:, None, :]
+        new_cache = {"conv": window[:, 1:, :].astype(cache["conv"].dtype),
+                     "h": h[:, 0, :]}
+
+    out = (h * y_branch).astype(x.dtype)
+    out = jnp.einsum("bsr,rd->bsd", out, p["wo"])
+    return x + out, new_cache

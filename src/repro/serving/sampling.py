@@ -1,0 +1,31 @@
+"""Token sampling: greedy / temperature / top-k / top-p, jit-friendly."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@partial(jax.jit, static_argnames=("top_k",))
+def sample(logits, key, temperature=0.0, top_k=0, top_p=1.0):
+    """logits (B, V) -> token ids (B,). temperature 0 = greedy."""
+    def greedy(_):
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    def stochastic(_):
+        l = logits.astype(jnp.float32) / jnp.maximum(temperature, 1e-6)
+        if top_k:
+            kth = jax.lax.top_k(l, top_k)[0][..., -1:]
+            l = jnp.where(l < kth, -jnp.inf, l)
+        # top-p (nucleus); top_p=1.0 keeps everything (cutoff = min logit)
+        sorted_l = jnp.sort(l, axis=-1)[..., ::-1]
+        probs = jax.nn.softmax(sorted_l, axis=-1)
+        csum = jnp.cumsum(probs, axis=-1)
+        cutoff_idx = jnp.minimum(jnp.sum(csum < top_p, axis=-1,
+                                         keepdims=True), l.shape[-1] - 1)
+        cutoff = jnp.take_along_axis(sorted_l, cutoff_idx, axis=-1)
+        l = jnp.where(l < cutoff, -jnp.inf, l)
+        return jax.random.categorical(key, l, axis=-1).astype(jnp.int32)
+
+    return jax.lax.cond(temperature <= 0.0, greedy, stochastic, None)

@@ -1,0 +1,153 @@
+"""Logical-axis sharding rules.
+
+Models annotate every parameter/activation dimension with a *logical* axis
+name ("batch", "heads", "experts", ...). A rules table maps logical names to
+physical mesh axes; resolution drops mesh axes that do not divide the
+dimension (e.g. kv_heads=2 on a 16-way model axis -> replicated), so one
+model definition serves every mesh.
+"""
+from __future__ import annotations
+
+import math
+from contextlib import contextmanager
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> tuple of candidate physical mesh axes (applied in order)
+DEFAULT_RULES = {
+    "batch": ("pod", "data"),
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "ff": ("model",),
+    "experts": ("model",),
+    "ssm_heads": ("model",),
+    "lru": ("model",),
+    "kv_seq": ("model",),
+    "fsdp": ("pod", "data"),
+    "seq": (),
+    "layers": (),
+    "d_model": (),
+    "state": (),
+    "kv_lora": (),
+}
+
+
+class _Ctx:
+    mesh: Mesh | None = None
+    rules: dict = DEFAULT_RULES
+
+
+_CTX = _Ctx()
+
+
+@contextmanager
+def axis_rules(mesh: Mesh | None, rules: dict | None = None):
+    """Install a mesh + logical rules for `shard()` constraints and
+    `named_sharding()` resolution."""
+    prev = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh = mesh
+    _CTX.rules = {**DEFAULT_RULES, **(rules or {})}
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.rules = prev
+
+
+def current_mesh() -> Mesh | None:
+    return _CTX.mesh
+
+
+def resolve_spec(shape, logical_axes, mesh: Mesh | None = None,
+                 rules: dict | None = None) -> P:
+    """Resolve logical axis names to a PartitionSpec for a given shape,
+    dropping mesh axes that don't divide the dim and axes already used."""
+    mesh = mesh or _CTX.mesh
+    rules = rules or _CTX.rules
+    if mesh is None:
+        return P()
+    assert len(shape) == len(logical_axes), (shape, logical_axes)
+    used: set = set()
+    spec = []
+    for dim, name in zip(shape, logical_axes):
+        if name is None:
+            spec.append(None)
+            continue
+        cands = rules.get(name, ())
+        chosen = []
+        size = 1
+        for ax in cands:
+            if ax not in mesh.shape or ax in used:
+                continue
+            ax_size = mesh.shape[ax]
+            if dim % (size * ax_size) == 0:
+                chosen.append(ax)
+                size *= ax_size
+        used.update(chosen)
+        if not chosen:
+            spec.append(None)
+        elif len(chosen) == 1:
+            spec.append(chosen[0])
+        else:
+            spec.append(tuple(chosen))
+    return P(*spec)
+
+
+def named_sharding(shape, logical_axes, mesh: Mesh | None = None) -> NamedSharding:
+    mesh = mesh or _CTX.mesh
+    return NamedSharding(mesh, resolve_spec(shape, logical_axes, mesh))
+
+
+def shard(x, *logical_axes):
+    """with_sharding_constraint by logical names; no-op without a mesh."""
+    if _CTX.mesh is None:
+        return x
+    spec = resolve_spec(x.shape, logical_axes)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_CTX.mesh, spec))
+
+
+def apply_fsdp(shapes_tree, axes_tree, mesh: Mesh | None = None,
+               fsdp_axis: str = "data", min_size: int = 2 ** 16):
+    """ZeRO-3-style weight sharding: for each large parameter that does not
+    already use ``fsdp_axis``, shard its largest divisible unsharded dim over
+    that axis (XLA SPMD then all-gathers per use and reduce-scatters grads).
+    Returns a new logical-axes tree where the chosen dims map to "fsdp"
+    (rules: "fsdp" -> (fsdp_axis,))."""
+    import numpy as np
+    mesh = mesh or _CTX.mesh
+    n = 1
+    if mesh is not None:
+        for ax in ("pod", "data"):
+            n *= mesh.shape.get(ax, 1)
+
+    leaves_s, treedef = jax.tree.flatten(shapes_tree)
+    leaves_a = treedef.flatten_up_to(axes_tree)
+    out = []
+    for s, ax in zip(leaves_s, leaves_a):
+        ax = tuple(ax)
+        size = int(np.prod(s.shape)) if s.shape else 0
+        if (n <= 1 or size < min_size or len(s.shape) < 2):
+            out.append(ax)
+            continue
+        # pick the largest dim that's currently unsharded (not the stacked
+        # 'layers' dim) and divisible by the fsdp axis
+        cands = [(s.shape[i], i) for i in range(len(s.shape))
+                 if ax[i] is None and s.shape[i] % n == 0]
+        if not cands:
+            out.append(ax)
+            continue
+        _, i = max(cands)
+        new_ax = ax[:i] + ("fsdp",) + ax[i + 1:]
+        out.append(new_ax)
+    return jax.tree.unflatten(treedef, out)
+
+
+def tree_shardings(shapes_tree, axes_tree, mesh: Mesh | None = None):
+    """Map a pytree of ShapeDtypeStructs + parallel tree of logical-axes
+    tuples to NamedShardings."""
+    mesh = mesh or _CTX.mesh
+    leaves_s, treedef = jax.tree.flatten(shapes_tree)
+    leaves_a = treedef.flatten_up_to(axes_tree)
+    out = [named_sharding(s.shape, a, mesh) for s, a in zip(leaves_s, leaves_a)]
+    return jax.tree.unflatten(treedef, out)

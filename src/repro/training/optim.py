@@ -1,0 +1,114 @@
+"""Optimizers implemented in-repo (optax is not available in this env).
+
+AdamW with optional factored second moment (Adafactor-style row/col stats)
+for the 1T-param configs where full fp32 v does not fit, plus global-norm
+clipping and cosine LR schedule.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    factored: bool = False      # factored 2nd moment for >=2D params
+    state_dtype: str = "float32"
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+
+
+def cosine_lr(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps) /
+                 jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def _use_factored(cfg, shape):
+    return cfg.factored and len(shape) >= 2
+
+
+def init_state(cfg: AdamWConfig, params):
+    dt = jnp.dtype(cfg.state_dtype)
+
+    def one(p):
+        if _use_factored(cfg, p.shape):
+            row = jnp.zeros(p.shape[:-1], dt)
+            col = jnp.zeros(p.shape[:-2] + p.shape[-1:], dt)
+            return {"m": jnp.zeros(p.shape, dt), "vr": row, "vc": col}
+        return {"m": jnp.zeros(p.shape, dt), "v": jnp.zeros(p.shape, dt)}
+
+    return {"mu": jax.tree.map(one, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def state_axes(cfg: AdamWConfig, params_axes):
+    """Logical axes for the optimizer state mirroring the param axes."""
+    def one(ax):
+        ax = tuple(ax)
+        if cfg.factored and len(ax) >= 2:
+            return {"m": ax, "vr": ax[:-1], "vc": ax[:-2] + ax[-1:]}
+        return {"m": ax, "v": ax}
+    is_ax = lambda t: isinstance(t, tuple) and all(
+        isinstance(e, (str, type(None))) for e in t)
+    return {"mu": jax.tree.map(one, params_axes, is_leaf=is_ax),
+            "step": ()}
+
+
+def apply_updates(cfg: AdamWConfig, params, grads, state):
+    step = state["step"] + 1
+    lr = cosine_lr(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def one(p, g, s):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * s["m"].astype(jnp.float32) + (1 - b1) * g
+        if "v" in s:
+            v = b2 * s["v"].astype(jnp.float32) + (1 - b2) * g * g
+            vhat = v / bc2
+            new_s = {"m": m.astype(s["m"].dtype), "v": v.astype(s["v"].dtype)}
+        else:
+            g2 = g * g
+            vr = b2 * s["vr"].astype(jnp.float32) + (1 - b2) * g2.mean(-1)
+            vc = b2 * s["vc"].astype(jnp.float32) + (1 - b2) * g2.mean(-2)
+            denom = jnp.maximum(vr.mean(-1, keepdims=True), 1e-30)
+            vhat = (vr[..., None] * vc[..., None, :] / denom[..., None]) / bc2
+            new_s = {"m": m.astype(s["m"].dtype),
+                     "vr": vr.astype(s["vr"].dtype),
+                     "vc": vc.astype(s["vc"].dtype)}
+        upd = (m / bc1) / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * upd).astype(p.dtype), new_s
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_s = treedef.flatten_up_to(state["mu"])
+    out = [one(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_mu = jax.tree.unflatten(treedef, [o[1] for o in out])
+    return new_params, {"mu": new_mu, "step": step}, {
+        "lr": lr, "grad_norm": gnorm}

@@ -1,0 +1,282 @@
+"""Beyond-paper extensions: carbon agent (Sec IV extensibility claim),
+FSDP sharding transform, fp8 KV cache, conversation migration (Scenario 1),
+and the resource-sharing scenario (Scenario 2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.carbon import CarbonAgent
+from repro.core.lighthouse import Lighthouse
+from repro.core.mist import MIST
+from repro.core.tide import TIDE
+from repro.core.waves import WAVES, Policy, Request
+
+
+def mk(registry, policy=None):
+    mist, tide = MIST(), TIDE(registry)
+    lh = Lighthouse(registry)
+    for i in registry.all():
+        lh.heartbeat(i.island_id)
+    return WAVES(mist, tide, lh, policy or Policy()), tide
+
+
+# ----------------------------------------------------------- carbon agent
+
+def test_register_agent_changes_routing(registry):
+    """Sec IV: a new objective is added without touching router code and
+    is automatically part of Eq. (1)."""
+    waves, tide = mk(registry, Policy(w_cost=0.05, w_latency=0.05,
+                                      w_privacy=0.05))
+    carbon = CarbonAgent(clock_h=12.0)
+    carbon.register_island("home-nas", grid="solar", watts=30)
+    carbon.register_island("clinic-edge", grid="coal_heavy", watts=150)
+    base = waves.route(Request(query="summarize this public text",
+                               sensitivity_override=0.5)).island.island_id
+    waves.register_agent("carbon", carbon.score, weight=2.0)
+    tide.state.clear()
+    green = waves.route(Request(query="summarize this public text",
+                                sensitivity_override=0.5)).island.island_id
+    assert green == "home-nas"          # solar island wins once weighted
+    # privacy constraint still inviolable with the extra agent
+    d = waves.route(Request(
+        query="Patient John Doe SSN 123-45-6789 diagnosed"))
+    if d.accepted:
+        assert d.island.privacy >= d.sensitivity
+
+
+def test_carbon_diurnal_curve():
+    c = CarbonAgent()
+    c.register_island("solar", grid="solar")
+    class I:  # minimal island stub
+        island_id = "solar"
+    c.clock_h = 12.0
+    noon = c.intensity(I())
+    c.clock_h = 0.0
+    night = c.intensity(I())
+    assert noon < night
+
+
+# ------------------------------------------------------------------ FSDP
+
+def test_apply_fsdp_shards_large_params():
+    from repro.sharding import apply_fsdp, axis_rules, resolve_spec
+    class M:
+        shape = {"data": 8, "model": 4}
+    shapes = {"w": jax.ShapeDtypeStruct((1024, 512), jnp.float32),
+              "tiny": jax.ShapeDtypeStruct((8,), jnp.float32),
+              "already": jax.ShapeDtypeStruct((1024, 64), jnp.float32)}
+    axes = {"w": (None, None), "tiny": (None,), "already": (None, "ff")}
+    out = apply_fsdp(shapes, axes, mesh=M())
+    assert "fsdp" in out["w"]
+    assert out["tiny"] == (None,)           # too small
+    assert "fsdp" in out["already"]         # free dim gets fsdp too
+    # resolution maps fsdp -> data and respects divisibility
+    spec = resolve_spec((1024, 512), out["w"], mesh=M())
+    assert "data" in str(spec)
+
+
+def test_fsdp_on_model_params_lower_single_device():
+    """FSDP axes tree must stay structurally valid for a real model."""
+    from repro.configs.base import get_config
+    from repro.models.model import get_model
+    from repro.sharding import apply_fsdp
+    cfg = get_config("qwen3-4b").reduced()
+    m = get_model(cfg)
+    abs_p = m.abstract()
+    class M:
+        shape = {"data": 2, "model": 2}
+    axes2 = apply_fsdp(abs_p, m.axes(), mesh=M())
+    leaves_s, treedef = jax.tree.flatten(abs_p)
+    leaves_a = treedef.flatten_up_to(axes2)
+    assert len(leaves_s) == len(leaves_a)
+    for s, a in zip(leaves_s, leaves_a):
+        assert len(a) == len(s.shape)  # rank-consistent axes everywhere
+
+
+# ------------------------------------------------------------- fp8 cache
+
+def test_fp8_kv_cache_decode_close():
+    from repro.configs.base import get_config
+    from repro.models.model import get_model
+    cfg = get_config("smollm-135m").reduced()
+    m = get_model(cfg)
+    params = m.init(jax.random.PRNGKey(0), "float32")
+    B, S, T = 2, 16, 3
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S + T), 0,
+                              cfg.vocab_size)
+    outs = {}
+    for dt in (jnp.float32, jnp.float8_e4m3fn):
+        cache = m.init_cache(B, S + T, dtype=dt)
+        _, cache, _ = m.forward(params, mode="full", cache=cache,
+                                tokens=toks[:, :S])
+        ls = []
+        for t in range(T):
+            ld, cache, _ = m.forward(params, mode="decode",
+                                     tokens=toks[:, S + t:S + t + 1],
+                                     cache=cache, pos=jnp.int32(S + t))
+            ls.append(np.asarray(ld))
+        outs[str(dt)] = np.stack(ls)
+    a, b = outs.values()
+    assert np.all(np.isfinite(b))
+    # fp8 KV tracks fp32 logits within quantization noise
+    assert float(np.max(np.abs(a - b))) < 0.5
+    rel = np.abs(a - b).mean() / (np.abs(a).mean() + 1e-9)
+    assert rel < 0.05
+
+
+# ------------------------------------------- Scenario 1: context migration
+
+def test_conversation_migrates_laptop_to_car(registry):
+    """Scenario 1: a conversation starts on the laptop; when the user
+    drives, the car island (intermittent) serves it; on cloud fallback the
+    history is sanitized; answers are de-anonymized back."""
+    from repro.core.islands import personal_island
+    registry.register(personal_island("car", latency_ms=300,
+                                      capacity_units=0.5),
+                      registry.attestation_token("car"))
+    waves, tide = mk(registry)
+    lh = waves.lighthouse
+    hist = ("Patient John Doe needs a follow-up visit",)
+    # at home: everything on the laptop (intra-personal: no MIST)
+    d1 = waves.route(Request(query="draft the follow-up note",
+                             history=hist, priority="primary"))
+    assert d1.island.tier == 1 and not d1.sanitize
+    # driving: laptop offline, car announces
+    lh._last_beat.pop("laptop", None)
+    lh.announce("car")
+    d2 = waves.route(Request(query="remind me about the visit",
+                             history=hist, priority="primary"))
+    assert d2.accepted and d2.island.island_id in ("car", "phone")
+    assert not d2.sanitize                  # still inside the trust group
+    # all personal devices exhausted -> cloud, sanitized
+    for i in registry.all():
+        if not i.unbounded:
+            st = tide._st(i.island_id)
+            st.cpu = st.gpu = st.mem = 0.99
+    d3 = waves.route(Request(query="general trivia question please",
+                             history=hist, priority="burstable",
+                             prev_privacy=1.0))
+    assert d3.accepted and d3.island.unbounded and d3.sanitize
+    assert "John Doe" not in " ".join(d3.sanitized_history)
+
+
+# ------------------------------------------------------------- Scenario 2
+
+def test_resource_sharing_balances_to_big_battery():
+    from repro.core.islands import IslandRegistry, personal_island
+    reg = IslandRegistry()
+    reg.register(personal_island("phone-A", latency_ms=80,
+                                 capacity_units=0.2),
+                 reg.attestation_token("phone-A"))
+    reg.register(personal_island("phone-B", latency_ms=180,
+                                 capacity_units=8.0),
+                 reg.attestation_token("phone-B"))
+    mist, tide = MIST(), TIDE(reg, buffer="conservative")
+    lh = Lighthouse(reg)
+    for i in reg.all():
+        lh.heartbeat(i.island_id)
+    waves = WAVES(mist, tide, lh, Policy())
+    counts = {"phone-A": 0, "phone-B": 0}
+    for k in range(12):
+        d = waves.route(Request(query=f"enhance photo {k}",
+                                priority="burstable"))
+        if d.accepted:
+            counts[d.island.island_id] += 1
+        tide.advance(1.0)
+    assert counts["phone-B"] > counts["phone-A"]
+
+
+# ---------------------------------------------------- pallas model fast path
+
+def test_pallas_fast_path_matches_xla():
+    """REPRO_PALLAS model path (flash/decode/SSD kernels) must equal the
+    portable XLA path."""
+    import dataclasses
+    from repro import kernels
+    from repro.configs.base import get_config
+    from repro.models.model import get_model
+    try:
+        for arch in ("smollm-135m", "mamba2-370m"):
+            cfg = get_config(arch).reduced()
+            if cfg.ssm_state:
+                cfg = dataclasses.replace(cfg, ssm_chunk=32)
+            m = get_model(cfg)
+            params = m.init(jax.random.PRNGKey(0), "float32")
+            toks = jax.random.randint(jax.random.PRNGKey(1), (2, 128), 0,
+                                      cfg.vocab_size)
+            kernels.enable(False)
+            l1, _, _ = m.forward(params, tokens=toks)
+            kernels.enable(True)
+            l2, _, _ = m.forward(params, tokens=toks)
+            np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                                       atol=5e-5)
+            # decode path through the kernel too (cache len % 128 == 0)
+            kernels.enable(True)
+            cache = m.init_cache(2, 128, dtype=jnp.float32)
+            _, cache, _ = m.forward(params, mode="full", cache=cache,
+                                    tokens=toks[:, :64])
+            ld, _, _ = m.forward(params, mode="decode",
+                                 tokens=toks[:, 64:65], cache=cache,
+                                 pos=jnp.int32(64))
+            assert bool(jnp.all(jnp.isfinite(ld)))
+    finally:
+        kernels.enable(False)
+        kernels._FORCED = None
+
+
+# --------------------------------------------------- conversation sessions
+
+def test_session_manager_multi_turn(registry):
+    """Scenario 1 as a serving feature: multi-turn chat keeps history,
+    sanitizes only on trust-boundary crossings, and keeps one placeholder
+    mapping per session."""
+    from repro.serving.engine import InferenceEngine
+    from repro.serving.session import SessionManager
+    waves, tide = mk(registry)
+    eng = InferenceEngine(waves, registry, {})
+    sm = SessionManager(eng)
+    r1 = sm.chat("s1", "Patient John Doe needs a refill", priority="primary")
+    assert r1 is not None and registry.get(r1.island_id).tier == 1
+    assert not r1.sanitized
+    r2 = sm.chat("s1", "also schedule a follow-up", priority="primary")
+    assert r2 is not None
+    s = sm.get("s1")
+    assert len(s.history) == 4                 # 2 queries + 2 answers
+    # force a cloud turn: history must be sanitized, response restored
+    for i in registry.all():
+        if not i.unbounded:
+            st = tide._st(i.island_id)
+            st.cpu = st.gpu = st.mem = 0.99
+    r3 = sm.chat("s1", "what are general refill policies",
+                 priority="burstable")
+    assert r3 is not None and registry.get(r3.island_id).unbounded
+    assert r3.sanitized
+    assert "[PERSON_" not in r3.text
+
+
+# ------------------------------------------- Sec XIV jurisdiction routing
+
+def test_jurisdiction_aware_routing(registry):
+    """GDPR policy: foreign-jurisdiction clouds are filtered even for
+    low-sensitivity requests; same-country/EU islands still serve."""
+    waves, tide = mk(registry, Policy(
+        allowed_jurisdictions=("same_country", "eu_gdpr")))
+    # exhaust bounded islands so cloud would otherwise win
+    for i in registry.all():
+        if not i.unbounded:
+            st = tide._st(i.island_id)
+            st.cpu = st.gpu = st.mem = 0.99
+    d = waves.route(Request(query="what is the capital of france",
+                            priority="burstable"))
+    # default cloud_island jurisdiction is "foreign" -> both clouds filtered
+    assert not d.accepted and d.reason == "infeasible"
+    # an EU-hosted cloud island satisfies the policy
+    from repro.core.islands import cloud_island
+    eu = cloud_island("eu-cloud", privacy=0.5, cost=0.01, latency_ms=700,
+                      jurisdiction="eu_gdpr", trust_jurisdiction=0.9)
+    registry.register(eu, registry.attestation_token("eu-cloud"))
+    waves.lighthouse.heartbeat("eu-cloud")
+    d = waves.route(Request(query="what is the capital of france",
+                            priority="burstable"))
+    assert d.accepted and d.island.island_id == "eu-cloud"

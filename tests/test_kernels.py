@@ -1,0 +1,132 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rglru import rglru_scan
+from repro.kernels.ssd import ssd_chunk, ssd_full
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("BH,BHkv,Sq,Sk,D,bq,bk", [
+    (4, 2, 256, 256, 64, 128, 128),
+    (2, 1, 128, 128, 32, 64, 64),
+    (8, 8, 256, 256, 128, 128, 128),
+    (2, 2, 512, 512, 64, 128, 256),
+])
+def test_flash_attention_sweep(BH, BHkv, Sq, Sk, D, bq, bk, dtype):
+    q = jax.random.normal(KEY, (BH, Sq, D), dtype)
+    k = jax.random.normal(jax.random.PRNGKey(1), (BHkv, Sk, D), dtype)
+    v = jax.random.normal(jax.random.PRNGKey(2), (BHkv, Sk, D), dtype)
+    o = flash_attention(q, k, v, block_q=bq, block_k=bk)
+    o_ref = ref.flash_attention(q, k, v, D ** -0.5)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(o_ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,Hkv,S,D,valid", [
+    (2, 8, 2, 1024, 64, 700),
+    (1, 4, 1, 512, 128, 512),
+    (3, 6, 6, 256, 32, 1),
+    (2, 16, 4, 2048, 64, 1234),
+])
+def test_decode_attention_sweep(B, H, Hkv, S, D, valid, dtype):
+    q = jax.random.normal(KEY, (B, H, D), dtype)
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, Hkv, D), dtype)
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, Hkv, D), dtype)
+    o = decode_attention(q, k, v, valid, block_k=256)
+    o_ref = ref.decode_attention(q, k, v, valid, D ** -0.5)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(o_ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("B,S,H,P,N,Q", [
+    (2, 128, 4, 32, 16, 32),
+    (1, 256, 2, 64, 128, 64),
+    (2, 64, 8, 16, 32, 16),
+])
+def test_ssd_full_sweep(B, S, H, P, N, Q):
+    x = jax.random.normal(KEY, (B, S, H, P), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(1), (B, S, H)))
+    a = -jnp.exp(jax.random.normal(jax.random.PRNGKey(2), (H,)) * 0.5)
+    B_ = jax.random.normal(jax.random.PRNGKey(3), (B, S, N), jnp.float32)
+    C_ = jax.random.normal(jax.random.PRNGKey(4), (B, S, N), jnp.float32)
+    y1 = ssd_full(x, dt, a, B_, C_, Q)
+    y2 = ref.ssd_full(x, dt, a, B_, C_, Q)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_ssd_chunk_pieces_match_ref():
+    B, nc, Q, H, P, N = 1, 4, 32, 2, 16, 8
+    x = jax.random.normal(KEY, (B, nc, Q, H, P), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(1),
+                                           (B, nc, Q, H)))
+    a = -jnp.exp(jax.random.normal(jax.random.PRNGKey(2), (H,)) * 0.5)
+    B_ = jax.random.normal(jax.random.PRNGKey(3), (B, nc, Q, N))
+    C_ = jax.random.normal(jax.random.PRNGKey(4), (B, nc, Q, N))
+    y1, s1, d1, c1 = ssd_chunk(x, dt, a, B_, C_)
+    y2, s2, d2, c2 = ref.ssd_chunk(x, dt, a, B_, C_)
+    for u, v in [(y1, y2), (s1, s2), (d1, d2), (c1, c2)]:
+        np.testing.assert_allclose(np.asarray(u), np.asarray(v), rtol=2e-4,
+                                   atol=2e-4)
+
+
+@pytest.mark.parametrize("B,S,C,bs,bl,h0flag", [
+    (2, 64, 128, 32, 64, False),
+    (1, 128, 256, 32, 128, True),
+    (3, 32, 512, 16, 256, False),
+])
+def test_rglru_scan_sweep(B, S, C, bs, bl, h0flag):
+    a = jax.nn.sigmoid(jax.random.normal(KEY, (B, S, C)))
+    b = jax.random.normal(jax.random.PRNGKey(1), (B, S, C), jnp.float32)
+    h0 = (jax.random.normal(jax.random.PRNGKey(2), (B, C))
+          if h0flag else None)
+    y1 = rglru_scan(a, b, h0, block_seq=bs, block_lanes=bl)
+    y2 = ref.rglru_scan(a, b, h0)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_ops_wrappers():
+    """jit'd public wrappers (model-layout shapes)."""
+    B, S, H, Hkv, D = 1, 128, 4, 2, 32
+    q = jax.random.normal(KEY, (B, S, H, D), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, Hkv, D))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, Hkv, D))
+    o = ops.flash_attention(q, k, v, block_q=64, block_k=64)
+    from repro.models.attention import attend_naive
+    o_ref = attend_naive(q, k, v, jnp.arange(S), jnp.arange(S), D ** -0.5)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref), atol=2e-5)
+
+    qd = jax.random.normal(KEY, (B, H, D), jnp.float32)
+    od = ops.decode_attention(qd, k, v, 100)
+    od_ref = ref.decode_attention(qd, k, v, 100, D ** -0.5)
+    np.testing.assert_allclose(np.asarray(od), np.asarray(od_ref), atol=2e-5)
+
+
+def test_model_ssm_block_matches_kernel_path():
+    """The model's XLA SSD (models.ssm.ssd_chunked) vs the Pallas ssd_full."""
+    from repro.models.ssm import ssd_chunked
+    B, S, H, P, N, Q = 1, 64, 2, 16, 8, 16
+    x = jax.random.normal(KEY, (B, S, H, P), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(1), (B, S, H)))
+    a = -jnp.exp(jax.random.normal(jax.random.PRNGKey(2), (H,)) * 0.3)
+    B_ = jax.random.normal(jax.random.PRNGKey(3), (B, S, N))
+    C_ = jax.random.normal(jax.random.PRNGKey(4), (B, S, N))
+    y_model, _ = ssd_chunked(x, dt, a, B_, C_, Q)
+    y_kernel = ssd_full(x, dt, a, B_, C_, Q)
+    np.testing.assert_allclose(np.asarray(y_model), np.asarray(y_kernel),
+                               rtol=2e-4, atol=2e-4)

@@ -1,0 +1,83 @@
+"""Sanity checks on the analytic roofline model (benchmarks/roofline.py)."""
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import jax
+
+from benchmarks.roofline import (analyze, analytic_flops, model_flops,
+                                 param_counts, step_collective_bytes,
+                                 step_flops)
+from repro.configs.base import ARCH_IDS, SHAPES, get_config
+
+
+def test_param_counts_match_abstract_tree():
+    """The roofline's param accounting must equal the model's real tree."""
+    from repro.models.model import get_model
+    for arch in ("smollm-135m", "deepseek-v2-lite-16b", "mamba2-370m"):
+        cfg = get_config(arch)
+        total, active, routed, embed = param_counts(cfg)
+        tree_total = sum(int(np.prod(s.shape)) for s in
+                         jax.tree.leaves(get_model(cfg).abstract()))
+        assert total == tree_total
+        assert 0 < active <= total
+        if cfg.num_experts:
+            assert routed > 0 and active < total
+
+
+def test_known_param_scales():
+    """Sanity vs public parameter counts (within 20%)."""
+    expect = {"smollm-135m": 135e6, "qwen3-4b": 4e9, "glm4-9b": 9.4e9,
+              "qwen3-32b": 32e9, "mamba2-370m": 370e6,
+              "kimi-k2-1t-a32b": 1.0e12}
+    for arch, n in expect.items():
+        total, _, _, _ = param_counts(get_config(arch))
+        assert abs(total - n) / n < 0.25, (arch, total)
+
+
+def test_kimi_active_params_about_32b():
+    _, active, _, _ = param_counts(get_config("kimi-k2-1t-a32b"))
+    assert 25e9 < active < 40e9  # "a32b"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_terms_positive_and_dominant_consistent(arch):
+    for sname in SHAPES:
+        r = analyze(arch, sname)
+        assert r.compute_s > 0 and r.memory_s > 0 and r.collective_s >= 0
+        terms = {"compute": r.compute_s, "memory": r.memory_s,
+                 "collective": r.collective_s}
+        assert r.dominant == max(terms, key=terms.get)
+        assert 0 < r.useful_ratio <= 1.5
+
+
+def test_train_flops_exceed_model_flops():
+    """Analytic step FLOPs include remat + attention: >= 6*N*D."""
+    for arch in ("glm4-9b", "qwen3-32b"):
+        cfg = get_config(arch)
+        shape = SHAPES["train_4k"]
+        f, _ = step_flops(cfg, shape)
+        assert f >= model_flops(cfg, shape)
+
+
+def test_collectives_shrink_with_smaller_model_axis():
+    cfg = get_config("qwen3-32b")
+    shape = SHAPES["train_4k"]
+    big = step_collective_bytes(cfg, shape, {"data": 16, "model": 16})
+    small = step_collective_bytes(cfg, shape, {"data": 64, "model": 4})
+    assert small < big
+
+
+def test_decode_memory_bound_almost_everywhere():
+    """Decode is memory-bound except recurrentgemma, whose tiny 2048-window
+    caches leave the LSE-combine collectives dominant."""
+    for arch in ARCH_IDS:
+        r = analyze(arch, "decode_32k")
+        if arch == "recurrentgemma-9b":
+            assert r.dominant == "collective"
+        else:
+            assert r.dominant == "memory"

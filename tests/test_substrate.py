@@ -1,0 +1,184 @@
+"""Training substrate: optimizer, checkpoint, data pipeline, sharding rules."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import checkpoint
+from repro.data.pipeline import SyntheticLM, pack_texts
+from repro.data.tokenizer import ByteTokenizer
+from repro.sharding import resolve_spec
+from repro.training import optim
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ------------------------------------------------------------------- optim
+
+def quad_params():
+    return {"a": jnp.array([3.0, -2.0]), "w": jnp.ones((4, 4)) * 2.0}
+
+
+def test_adamw_minimizes_quadratic():
+    cfg = optim.AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=0,
+                            total_steps=200, min_lr_ratio=1.0)
+    params = quad_params()
+    state = optim.init_state(cfg, params)
+
+    @jax.jit
+    def step(p, s):
+        loss, g = jax.value_and_grad(
+            lambda q: sum(jnp.sum(x ** 2) for x in jax.tree.leaves(q)))(p)
+        p, s, _ = optim.apply_updates(cfg, p, g, s)
+        return p, s, loss
+
+    for _ in range(200):
+        params, state, loss = step(params, state)
+    assert float(loss) < 1e-2
+
+
+def test_grad_clipping():
+    cfg = optim.AdamWConfig(lr=1e-3, clip_norm=1.0)
+    params = {"w": jnp.zeros((4,))}
+    state = optim.init_state(cfg, params)
+    huge = {"w": jnp.full((4,), 1e6)}
+    _, _, stats = optim.apply_updates(cfg, params, huge, state)
+    assert float(stats["grad_norm"]) > 1e5  # reported unclipped
+
+
+def test_factored_state_shapes():
+    cfg = optim.AdamWConfig(factored=True)
+    params = {"w": jnp.zeros((8, 16)), "b": jnp.zeros((16,))}
+    state = optim.init_state(cfg, params)
+    assert state["mu"]["w"]["vr"].shape == (8,)
+    assert state["mu"]["w"]["vc"].shape == (16,)
+    assert "v" in state["mu"]["b"]  # 1-D params stay unfactored
+
+
+def test_factored_tracks_adamw():
+    """Factored second moment should roughly match full AdamW trajectory."""
+    def run(factored):
+        cfg = optim.AdamWConfig(lr=0.05, factored=factored, weight_decay=0.0,
+                                warmup_steps=0, total_steps=100,
+                                min_lr_ratio=1.0)
+        params = {"w": jnp.ones((8, 8))}
+        state = optim.init_state(cfg, params)
+        for _ in range(50):
+            g = {"w": params["w"] * 2.0}
+            params, state, _ = optim.apply_updates(cfg, params, g, state)
+        return float(jnp.sum(jnp.abs(params["w"])))
+
+    full, fact = run(False), run(True)
+    assert abs(full - fact) / max(full, 1e-9) < 0.35
+
+
+def test_cosine_schedule_monotone_after_warmup():
+    cfg = optim.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                            min_lr_ratio=0.1)
+    lrs = [float(optim.cosine_lr(cfg, jnp.int32(s))) for s in range(100)]
+    assert lrs[0] < lrs[9]                       # warmup rises
+    assert all(a >= b - 1e-9 for a, b in zip(lrs[10:], lrs[11:]))
+    assert lrs[-1] >= 0.1 * 0.99                 # floor respected
+
+
+# -------------------------------------------------------------- checkpoint
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"params": {"w": jnp.arange(12.0).reshape(3, 4),
+                       "b": jnp.ones((4,), jnp.bfloat16)},
+            "step": jnp.int32(7)}
+    p = checkpoint.save(tmp_path / "ck", tree, step=7)
+    back = checkpoint.restore(p, tree)
+    assert back["params"]["b"].dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(back["params"]["w"]),
+                               np.asarray(tree["params"]["w"]))
+    assert checkpoint.latest_step(tmp_path / "ck") == 7
+
+
+def test_checkpoint_train_resume(tmp_path):
+    """Driver-level resume: same final loss with/without interruption."""
+    import shutil
+    from repro.launch.train import main
+    common = ["--smoke", "--batch", "2", "--seq", "32", "--log-every", "100",
+              "--steps", "6"]
+    ck = tmp_path / "r"
+    h1 = main([*common, "--ckpt-dir", str(ck), "--ckpt-every", "3"])
+    # pretend the run died after step 3: drop later checkpoints, resume
+    shutil.rmtree(ck / "step_00000006")
+    h2 = main([*common, "--ckpt-dir", str(ck), "--resume"])
+    assert abs(h1[-1]["loss"] - h2[-1]["loss"]) < 1e-3
+
+
+# -------------------------------------------------------------------- data
+
+def test_synthetic_data_deterministic():
+    d1 = SyntheticLM(100, 4, 16, seed=3)
+    d2 = SyntheticLM(100, 4, 16, seed=3)
+    b1, b2 = d1.next_batch(), d2.next_batch()
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    d2.seek(5)
+    d1.seek(5)
+    np.testing.assert_array_equal(d1.next_batch()["tokens"],
+                                  d2.next_batch()["tokens"])
+
+
+def test_synthetic_data_learnable_structure():
+    d = SyntheticLM(100, 8, 64, seed=0)
+    t = d.next_batch()["tokens"]
+    follow = (t[:, :-1] * 7 + 1) % 100
+    frac = float((t[:, 1:] == follow).mean())
+    # the vectorized injection re-derives follow from post-substitution
+    # tokens, so the measured fraction sits below the 0.5 injection rate
+    assert frac > 0.2  # injected bigram structure present
+
+
+@given(st.text(max_size=80))
+@settings(max_examples=50, deadline=None)
+def test_tokenizer_roundtrip_ascii(text):
+    tok = ByteTokenizer(50000)
+    ids = tok.encode(text, bos=False)
+    assert tok.decode(ids) == text
+
+
+def test_pack_texts_shapes():
+    b = pack_texts(["hello", "a much longer piece of text"], 512, 16)
+    assert b["tokens"].shape == (2, 16)
+
+
+# ----------------------------------------------------------------- sharding
+
+class _FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+
+
+def test_resolve_spec_divisibility():
+    mesh = _FakeMesh({"data": 16, "model": 16})
+    # divisible: sharded
+    assert resolve_spec((256, 128), ("batch", "heads"), mesh) == \
+        jax.sharding.PartitionSpec("data", "model")
+    # kv_heads=2 on 16-way model axis: replicated
+    spec = resolve_spec((32, 2), ("batch", "kv_heads"), mesh)
+    assert spec[1] is None
+    # batch 1: replicated
+    spec = resolve_spec((1, 64), ("batch", None), mesh)
+    assert spec[0] is None
+
+
+def test_resolve_spec_multipod_batch():
+    mesh = _FakeMesh({"pod": 2, "data": 16, "model": 16})
+    spec = resolve_spec((256, 10), ("batch", None), mesh)
+    assert spec[0] == ("pod", "data")
+    # batch 16 : only one of pod/data fits -> pod then stop (16 % 32 != 0)
+    spec = resolve_spec((16, 10), ("batch", None), mesh)
+    assert spec[0] in ("pod", ("pod",), ("pod", "data"))
+
+
+def test_no_double_axis_use():
+    mesh = _FakeMesh({"model": 16})
+    spec = resolve_spec((64, 64), ("heads", "ff"), mesh)
+    used = [s for s in spec if s is not None]
+    assert len(used) <= 1  # "model" must not shard two dims of one array

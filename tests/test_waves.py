@@ -1,0 +1,256 @@
+"""WAVES routing: Algorithm 1 invariants, guarantees G1-G3, baselines,
+and the scalar-vs-vectorized equivalence property."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import routing_jax as rj
+from repro.core.islands import TIER_CLOUD, TIER_PERSONAL
+from repro.core.lighthouse import Lighthouse
+from repro.core.mist import MIST
+from repro.core.tide import TIDE
+from repro.core.waves import BaselineRouter, Policy, Request, WAVES
+
+
+def mk_waves(registry, policy=None, mist=None, tide=None):
+    mist = mist or MIST()
+    tide = tide or TIDE(registry)
+    lh = Lighthouse(registry)
+    for i in registry.all():
+        lh.heartbeat(i.island_id)
+    return WAVES(mist, tide, lh, policy or Policy()), mist, tide, lh
+
+
+# -------------------------------------------------- Guarantee 1: P_j >= s_r
+
+def test_privacy_constraint_always_holds(stack):
+    reg, mist, tide, lh, waves = stack
+    queries = [
+        "Patient John Doe diagnosed with cancer, SSN 123-45-6789",
+        "what is the weather like",
+        "privileged and confidential case strategy",
+        "my email is a@b.com",
+    ]
+    for q in queries:
+        d = waves.route(Request(query=q))
+        if d.accepted:
+            assert d.island.privacy >= d.sensitivity
+
+
+def test_fail_closed_on_infeasible(registry):
+    """Attack 1: even with all local islands exhausted, high-sensitivity
+    requests must NOT degrade to cloud — reject instead."""
+    waves, mist, tide, lh = mk_waves(registry)
+    tide.crashed = True  # TIDE compromised/crashed: reports exhaustion
+    d = waves.route(Request(
+        query="Patient John Doe diagnosed with cancer, SSN 123-45-6789",
+        priority="secondary"))
+    if d.accepted:  # primary-tier queueing is the only acceptable escape
+        assert d.island.privacy >= d.sensitivity
+        assert d.island.tier == TIER_PERSONAL
+    else:
+        assert d.reason == "infeasible"
+
+
+def test_queue_local_policy(registry):
+    waves, mist, tide, lh = mk_waves(
+        registry, Policy(on_infeasible="queue_local"))
+    tide.crashed = True
+    d = waves.route(Request(
+        query="Patient John Doe diagnosed with cancer, SSN 123-45-6789"))
+    # queue_local still never violates privacy
+    if d.accepted:
+        assert d.island.tier == TIER_PERSONAL
+        assert d.island.privacy >= d.sensitivity
+
+
+def test_low_sensitivity_may_use_cloud(stack):
+    reg, mist, tide, lh, waves = stack
+    # exhaust the bounded islands
+    for i in reg.all():
+        if not i.unbounded:
+            st_ = tide._st(i.island_id)
+            st_.cpu = st_.gpu = st_.mem = 0.99
+    d = waves.route(Request(query="what is the capital of france",
+                            priority="burstable"))
+    assert d.accepted
+    assert d.island.tier == TIER_CLOUD
+
+
+# ------------------------------------------------ Guarantee 2: sanitization
+
+def test_sanitize_on_trust_boundary(stack):
+    reg, mist, tide, lh, waves = stack
+    for i in reg.all():
+        if not i.unbounded:
+            st_ = tide._st(i.island_id)
+            st_.cpu = st_.gpu = st_.mem = 0.99
+    hist = ("Patient John Doe was diagnosed earlier",)
+    d = waves.route(Request(query="general followup question thanks",
+                            history=hist, priority="burstable",
+                            prev_privacy=1.0))
+    assert d.accepted and d.island.tier == TIER_CLOUD
+    assert d.sanitize
+    joined = " ".join(d.sanitized_history)
+    assert "John Doe" not in joined
+    assert d.placeholder_store is not None
+    assert waves.mist.desanitize(
+        d.sanitized_history[0], d.placeholder_store) == hist[0]
+
+
+def test_intra_personal_bypasses_mist(stack):
+    reg, mist, tide, lh, waves = stack
+    d = waves.route(Request(query="hello notes",
+                            history=("Patient John Doe info",),
+                            priority="primary"))
+    assert d.accepted
+    assert d.island.tier == TIER_PERSONAL
+    assert not d.sanitize      # personal group: no placeholder substitution
+
+
+# ------------------------------------------------ Guarantee 3: data locality
+
+def test_data_locality_routes_to_data(stack):
+    reg, mist, tide, lh, waves = stack
+    d = waves.route(Request(query="find precedents for contract breach",
+                            dataset="caselaw-10tb"))
+    assert d.accepted
+    assert d.island.island_id == "firm-server"
+    assert "caselaw-10tb" in d.island.datasets
+
+
+def test_data_locality_fail_closed(stack):
+    reg, mist, tide, lh, waves = stack
+    d = waves.route(Request(query="query", dataset="nonexistent-corpus"))
+    assert not d.accepted
+
+
+# --------------------------------------------------------------- the score
+
+def test_composite_score_eq1(stack):
+    reg, mist, tide, lh, waves = stack
+    p = waves.policy
+    isl = reg.get("gpt4-api")
+    expect = (p.w_cost * min(isl.cost_per_request / p.cost_scale, 1)
+              + p.w_latency * min(isl.latency_ms / p.latency_scale_ms, 1)
+              + p.w_privacy * (1 - isl.privacy))
+    assert waves.composite_score(isl) == pytest.approx(expect)
+
+
+def test_zero_cost_local_preferred_when_free(stack):
+    reg, mist, tide, lh, waves = stack
+    d = waves.route(Request(query="hello world", priority="secondary"))
+    assert d.accepted
+    assert d.island.cost_per_request == 0.0   # cost optimality
+
+
+def test_constraint_mode_min_latency(registry):
+    waves, *_ = mk_waves(registry, Policy(mode="constraint"))
+    d = waves.route(Request(query="hello world"))
+    assert d.accepted
+    # among feasible islands, must pick min latency (laptop 120ms)
+    assert d.island.island_id == "laptop"
+
+
+def test_budget_ceiling(registry):
+    waves, mist, tide, lh = mk_waves(
+        registry, Policy(budget_per_request=0.001))
+    for i in registry.all():
+        if not i.unbounded:
+            st_ = tide._st(i.island_id)
+            st_.cpu = st_.gpu = st_.mem = 0.99
+    d = waves.route(Request(query="what is the capital of france",
+                            priority="burstable"))
+    assert not d.accepted   # cloud too expensive, locals exhausted
+
+
+def test_deadline_filter(stack):
+    reg, mist, tide, lh, waves = stack
+    d = waves.route(Request(query="hello world", deadline_ms=150.0))
+    assert d.accepted
+    assert d.island.latency_ms <= 150.0
+
+
+def test_rate_limiting(registry):
+    """Attack 4: flooding is rate-limited per user."""
+    waves, *_ = mk_waves(registry, Policy(rate_limit_per_s=1.0))
+    results = [waves.route(Request(query="hi", user="flooder")).reason
+               for _ in range(30)]
+    assert "rate_limited" in results
+
+
+# ---------------------------------------------------------------- baselines
+
+def test_cloud_only_violates_privacy(registry):
+    r = BaselineRouter("cloud_only", MIST(), TIDE(registry),
+                       mk_waves(registry)[3])
+    d = r.route(Request(query="Patient John Doe SSN 123-45-6789 diagnosed"))
+    assert d.accepted
+    assert d.island.privacy < d.sensitivity  # the violation IslandRun avoids
+
+
+def test_local_only_fails_under_exhaustion(registry):
+    waves, mist, tide, lh = mk_waves(registry)
+    r = BaselineRouter("local_only", mist, tide, lh)
+    for i in registry.all():
+        if i.tier == TIER_PERSONAL:
+            st_ = tide._st(i.island_id)
+            st_.cpu = st_.gpu = st_.mem = 0.99
+    d = r.route(Request(query="hello", priority="burstable"))
+    assert not d.accepted
+
+
+# ---------------------------------- scalar vs vectorized JAX router (oracle)
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_route_batch_matches_scalar(seed):
+    from conftest import build_registry
+    registry = build_registry()
+    rng = np.random.default_rng(seed)
+    islands = registry.all()
+    tide = TIDE(registry)
+    waves, mist, tide, lh = mk_waves(registry, tide=tide)
+    n_req = 8
+    sens = rng.uniform(0, 1, n_req).astype(np.float32)
+    gates = np.zeros(n_req, np.float32)
+    w = (waves.policy.w_cost, waves.policy.w_latency, waves.policy.w_privacy)
+    for i in range(n_req):
+        # snapshot island state BEFORE each scalar decision (routing
+        # mutates TIDE load, so the table is re-packed per tick)
+        tbl = rj.pack_islands(islands, [], tide)
+        reqs = rj.pack_requests(sens[i:i + 1], gates[i:i + 1],
+                                personal_only=[True])
+        assign, feasible, _ = rj.route_batch(tbl, reqs, w)
+        d = waves.route(Request(query="x", sensitivity_override=float(sens[i]),
+                                priority="primary"))
+        if bool(feasible[0]):
+            assert d.accepted
+            assert islands[int(assign[0])].island_id == d.island.island_id
+        else:
+            assert not d.accepted
+
+
+def test_pareto_front_nonempty(registry):
+    tide = TIDE(registry)
+    tbl = rj.pack_islands(registry.all(), [], tide)
+    front = np.asarray(rj.pareto_front(tbl))
+    assert front.any()
+    # laptop (free, fast, private) must be on the front
+    names = [i.island_id for i in registry.all()]
+    assert front[names.index("laptop")]
+
+
+def test_pareto_front_property(registry):
+    tide = TIDE(registry)
+    tbl = rj.pack_islands(registry.all(), [], tide)
+    front = np.asarray(rj.pareto_front(tbl))
+    objs = np.stack([np.asarray(tbl.cost), np.asarray(tbl.latency),
+                     1 - np.asarray(tbl.privacy)], 1)
+    for j in range(len(objs)):
+        dominated = any(
+            np.all(objs[k] <= objs[j]) and np.any(objs[k] < objs[j])
+            for k in range(len(objs)) if k != j)
+        assert front[j] == (not dominated)
