@@ -1,6 +1,6 @@
 """Serving-stack benchmark: real reduced-model prefill/decode throughput on
-the local SHORE island + end-to-end engine requests/second (routing + MIST
-+ execution), CPU numbers."""
+the local SHORE island, end-to-end engine requests/second (routing + MIST
++ execution), and the per-request vs tick-batched A/B — CPU numbers."""
 from __future__ import annotations
 
 import time
@@ -11,7 +11,8 @@ import numpy as np
 
 from repro.configs.base import get_config
 from repro.launch.serve import build_mesh
-from repro.serving.engine import InferenceEngine, LocalModelServer
+from repro.serving.engine import (InferenceEngine, LocalModelServer,
+                                  TickOrchestrator)
 from repro.core.workload import healthcare_workload
 
 
@@ -66,6 +67,67 @@ def run():
     lines.append(("serve/engine_e2e", us,
                   f"viol={s['privacy_violations']} sanitized={s['sanitized']}"
                   f" islands={len(s['by_island'])}"))
+
+    lines.extend(routed_throughput(cfg))
+    return lines
+
+
+def routed_throughput(cfg, n_requests=16, max_new=8, slots=8):
+    """Per-request Algorithm-1 loop vs tick-batched orchestrator on the
+    same ≥16-request pool: requests/sec, decode tokens/sec, utilization.
+
+    Both paths route the identical workload through the same mesh and run
+    the same reduced model on the laptop SHORE island; each path is warmed
+    on the pool once (jit compilation of its prefill/decode shapes) and
+    timed on a second pass.
+    """
+    lines = []
+    wl = healthcare_workload(n_requests, seed=7)
+
+    # --- per-request: one scalar route + one-shot generate() per request
+    reg, waves = build_mesh()
+    srv = LocalModelServer(cfg, max_len=96)
+    eng = InferenceEngine(waves, reg, {"laptop": srv})
+    for req, _ in wl:                       # warm: compile every shape
+        eng.submit(req, max_new_tokens=max_new)
+    warm_len = len(eng.log)                 # rejections never enter log
+    t0 = time.perf_counter()
+    for req, _ in wl:
+        eng.submit(req, max_new_tokens=max_new)
+    dt_seq = time.perf_counter() - t0
+    done_seq = len(eng.log) - warm_len
+    n_local_seq = sum(1 for r in eng.log[warm_len:]
+                      if r.island_id == "laptop")
+
+    # --- tick-batched: pool routed per tick, SHORE via continuous batcher
+    from repro.serving.batcher import ContinuousBatcher
+    reg2, waves2 = build_mesh()
+    bat = ContinuousBatcher(cfg, num_slots=slots, max_len=96)
+    orch = TickOrchestrator(waves2, reg2, {"laptop": bat})
+    for req, _ in wl:                       # warm
+        orch.submit(req, max_new_tokens=max_new)
+    orch.run_until_done()
+    tok0 = bat.stats["decode_tokens"]
+    warm_len_b = len(orch.log)
+    t0 = time.perf_counter()
+    for req, _ in wl:
+        orch.submit(req, max_new_tokens=max_new)
+    orch.run_until_done()
+    dt_bat = time.perf_counter() - t0
+    toks = bat.stats["decode_tokens"] - tok0
+    done_bat = len(orch.log) - warm_len_b
+    n_local_bat = sum(1 for r in orch.log[warm_len_b:]
+                      if r.island_id == "laptop")
+
+    rps_seq = max(done_seq, 1) / dt_seq
+    rps_bat = max(done_bat, 1) / dt_bat
+    lines.append(("serve/routed_per_request", dt_seq / n_requests * 1e6,
+                  f"{rps_seq:.1f} req/s local={n_local_seq}"))
+    lines.append(("serve/routed_tick_batched", dt_bat / n_requests * 1e6,
+                  f"{rps_bat:.1f} req/s local={n_local_bat} "
+                  f"decode={toks / dt_bat:.0f} tok/s "
+                  f"speedup={rps_bat / rps_seq:.2f}x "
+                  f"slots={slots} ticks={orch.tick_stats['ticks']}"))
     return lines
 
 

@@ -118,6 +118,189 @@ def route_batch(tbl: IslandTable, reqs, weights, *, mode="scalarized",
     return assign, feasible, masked
 
 
+# ------------------------------------------------------- tick orchestration
+#
+# route_batch above answers "which island would each request pick, given a
+# frozen capacity snapshot" — every request sees the same R_j(t), so a single
+# tick can oversubscribe a bounded island (8 requests all observe R=0.85 and
+# all pick the laptop). route_batch_tick closes that gap: a sequential greedy
+# pass (lax.fori_loop, O(1) HLO in pool size) that replays the scalar
+# Algorithm-1 semantics request-by-request INSIDE one XLA program — TIDE load
+# accounting, hysteresis transitions and dynamic queueing-aware latency are
+# carried through the loop, so request i sees the capacity left over by
+# requests 0..i-1. The scalar ``waves.route`` path stays the decision oracle;
+# tests/test_orchestrator.py asserts decision equivalence.
+
+# Mirrors of the TIDE constants (imported, not copied, so they cannot drift).
+from repro.core.tide import (DEAD_ZONE as _DEAD_ZONE,
+                             LOAD_MIX as _LOAD_MIX,
+                             QUEUE_FACTOR as _QUEUE_FACTOR,
+                             RECOVERY_CAP as _RECOVERY_CAP)
+
+# The kernel accumulates load in float32 while the scalar oracle uses Python
+# floats; a capacity that lands EXACTLY on a tier gate (e.g. r == 0.6 after
+# three 0.8/6 load increments) can fall on opposite sides of >= in the two
+# precisions. Admission comparisons get this slack so boundary ties resolve
+# the same way as the f64 oracle.
+CAP_EPS = 1e-6
+
+
+def pack_tide_state(islands, tide):
+    """Per-island *dynamic* state consumed by route_batch_tick: resource
+    utilization (cpu/gpu/mem), inflight work, hysteresis flags, base latency
+    and the per-assignment work cost 1/capacity_units.
+
+    A crashed TIDE fails conservative exactly like the scalar path: bounded
+    islands pack as fully utilized (R=0, no admission) with zero inflight
+    and zero work cost, so effective latency stays at base and nothing
+    accumulates in-kernel."""
+    sts = [tide._st(i.island_id) for i in islands]
+    if tide.crashed:
+        n = len(islands)
+        cpu = gpu = mem = jnp.ones((n,), jnp.float32)
+        inflight = w_unit = jnp.zeros((n,), jnp.float32)
+    else:
+        cpu = jnp.array([s.cpu for s in sts], jnp.float32)
+        gpu = jnp.array([s.gpu for s in sts], jnp.float32)
+        mem = jnp.array([s.mem for s in sts], jnp.float32)
+        inflight = jnp.array([s.inflight for s in sts], jnp.float32)
+        w_unit = jnp.array([1.0 / max(i.capacity_units, 1e-6)
+                            for i in islands], jnp.float32)
+    return {
+        "cpu": cpu,
+        "gpu": gpu,
+        "mem": mem,
+        "inflight": inflight,
+        "local_ok": jnp.array([s.local_ok for s in sts], bool),
+        "base_latency": jnp.array([i.latency_ms for i in islands],
+                                  jnp.float32),
+        "w_unit": w_unit,
+    }
+
+
+def unpack_tide_state(state, islands, tide):
+    """Write a kernel-final state back into TIDE so cross-tick dynamics
+    (decay, next tick's admission) continue from where the batch left off."""
+    if tide.crashed:
+        # only the hysteresis flags are real (the load fields were packed
+        # as the fail-closed sentinel, not the actual LoadState)
+        lok = np.asarray(state["local_ok"])
+        for j, isl in enumerate(islands):
+            tide._st(isl.island_id).local_ok = bool(lok[j])
+        return
+    cpu = np.asarray(state["cpu"])
+    gpu = np.asarray(state["gpu"])
+    mem = np.asarray(state["mem"])
+    infl = np.asarray(state["inflight"])
+    lok = np.asarray(state["local_ok"])
+    for j, isl in enumerate(islands):
+        st = tide._st(isl.island_id)
+        st.cpu = float(cpu[j])
+        st.gpu = float(gpu[j])
+        st.mem = float(mem[j])
+        st.inflight = float(infl[j])
+        st.local_ok = bool(lok[j])
+
+
+@partial(jax.jit, static_argnames=("mode", "on_infeasible"))
+def route_batch_tick(tbl: IslandTable, reqs, weights, state, extra_ok, *,
+                     mode="scalarized", on_infeasible="reject",
+                     budget=jnp.inf, min_trust=0.0, cost_scale=0.05,
+                     latency_scale=2000.0):
+    """Capacity-aware batched routing for one scheduling tick.
+
+    ``extra_ok`` is an (m, n) bool mask carrying the request×island
+    constraints that live outside the packed tables (model family,
+    jurisdiction); pass all-ones when unused.
+
+    Returns ``(assign, accepted, queued, score, n_candidates, new_state)``:
+    assign (m,) int32 island index or -1; queued marks requests placed by the
+    ``queue_local`` infeasibility fallback; score is the scalarized composite
+    of the chosen island; new_state is the post-batch TIDE state to write
+    back via unpack_tide_state.
+    """
+    m = reqs["sens"].shape[0]
+    n = tbl.privacy.shape[0]
+    w1, w2, w3 = weights[0], weights[1], weights[2]
+    base_lat = state["base_latency"]
+    w_unit = state["w_unit"]
+    cn = jnp.minimum(tbl.cost / cost_scale, 1.0)
+    static_ok = tbl.alive & (tbl.cost <= budget) & (tbl.trust >= min_trust)
+    idx_n = jnp.arange(n, dtype=jnp.int32)
+
+    def body(i, carry):
+        cpu, gpu, mem, infl, lok, assign, acc, que, sco, ncand = carry
+        sens_i = reqs["sens"][i]
+        gate_i = reqs["gate"][i]
+        prim_i = reqs["personal_only"][i]
+        ds_i = reqs["dataset"][i]
+        # hard filters, in the scalar _eligible order: everything BEFORE the
+        # capacity check gates whether an island's hysteresis state is even
+        # consulted (the scalar path early-returns, never calling admits).
+        pre = static_ok & (tbl.privacy >= sens_i)
+        pre &= jnp.where(prim_i, tbl.tier == 1, True)
+        pre &= jnp.where(ds_i >= 0, tbl.datasets[:, jnp.maximum(ds_i, 0)],
+                         True)
+        pre &= extra_ok[i]
+        pre &= base_lat <= reqs["deadline"][i]
+        # capacity admission with hysteresis (TIDE.admits): bounded islands
+        # fall back when R drops under the tier gate and only recover a
+        # DEAD_ZONE above it; primary bypasses, unbounded always admits.
+        r = 1.0 - jnp.maximum(cpu, jnp.maximum(gpu, mem))
+        recov = jnp.minimum(gate_i + _DEAD_ZONE, _RECOVERY_CAP)
+        cap_ok = jnp.where(lok, r >= gate_i - CAP_EPS, r >= recov - CAP_EPS)
+        ok = pre & (tbl.unbounded | prim_i | cap_ok)
+        touched = pre & ~tbl.unbounded & ~prim_i
+        lok = jnp.where(touched, cap_ok, lok)
+        # queueing-aware latency: inflight work accumulated THIS tick
+        # inflates a bounded island's effective latency before scoring.
+        eff_lat = jnp.where(tbl.unbounded, base_lat,
+                            base_lat * (1.0 + _QUEUE_FACTOR * infl))
+        ln = jnp.minimum(eff_lat / latency_scale, 1.0)
+        s_comp = w1 * cn + w2 * ln + w3 * (1.0 - tbl.privacy)
+        score = eff_lat if mode == "constraint" else s_comp
+        masked = jnp.where(ok, score, BIG)
+        j = jnp.argmin(masked).astype(jnp.int32)
+        feas = jnp.any(ok)
+        if on_infeasible == "queue_local":
+            okq = tbl.alive & (tbl.tier == 1) & (tbl.privacy >= sens_i)
+            jq = jnp.argmin(jnp.where(okq, s_comp, BIG)).astype(jnp.int32)
+            hasq = jnp.any(okq)
+            que_i = ~feas & hasq
+            j = jnp.where(feas, j, jq)
+            acc_i = feas | hasq
+        else:
+            que_i = jnp.zeros((), bool)
+            acc_i = feas
+        # account the chosen island's load (TIDE.add_load, bounded only) so
+        # the NEXT request in this tick sees the decremented capacity.
+        hot = (idx_n == j) & acc_i & ~tbl.unbounded
+        gpu = jnp.where(hot, jnp.minimum(1.0, gpu + _LOAD_MIX["gpu"]
+                                         * w_unit), gpu)
+        cpu = jnp.where(hot, jnp.minimum(1.0, cpu + _LOAD_MIX["cpu"]
+                                         * w_unit), cpu)
+        mem = jnp.where(hot, jnp.minimum(1.0, mem + _LOAD_MIX["mem"]
+                                         * w_unit), mem)
+        infl = jnp.where(hot, infl + w_unit, infl)
+        assign = assign.at[i].set(jnp.where(acc_i, j, -1))
+        acc = acc.at[i].set(acc_i)
+        que = que.at[i].set(que_i)
+        sco = sco.at[i].set(jnp.where(acc_i, s_comp[j], -1.0))
+        ncand = ncand.at[i].set(jnp.sum(ok).astype(jnp.int32))
+        return cpu, gpu, mem, infl, lok, assign, acc, que, sco, ncand
+
+    init = (state["cpu"], state["gpu"], state["mem"], state["inflight"],
+            state["local_ok"],
+            jnp.full((m,), -1, jnp.int32), jnp.zeros((m,), bool),
+            jnp.zeros((m,), bool), jnp.full((m,), -1.0, jnp.float32),
+            jnp.zeros((m,), jnp.int32))
+    cpu, gpu, mem, infl, lok, assign, acc, que, sco, ncand = \
+        jax.lax.fori_loop(0, m, body, init)
+    new_state = dict(state, cpu=cpu, gpu=gpu, mem=mem, inflight=infl,
+                     local_ok=lok)
+    return assign, acc, que, sco, ncand, new_state
+
+
 def pareto_front(tbl: IslandTable):
     """Non-dominated islands in (cost, latency, 1-privacy) space."""
     objs = jnp.stack([tbl.cost, tbl.latency, 1.0 - tbl.privacy], axis=1)

@@ -32,6 +32,14 @@ DEAD_ZONE = 0.10
 # Sec IX-B priority-tier gates: secondary local if R>50%, burstable if R>80%
 TIER_GATES = {"primary": 0.0, "secondary": 0.50, "burstable": 0.80}
 
+# One work unit's resource mix (add_load), the queueing-delay inflation
+# factor (effective_latency_ms) and the hysteresis recovery clamp (admits).
+# Named so the batched routing kernel (core.routing_jax.route_batch_tick)
+# imports the SAME constants and cannot drift from the scalar semantics.
+LOAD_MIX = {"gpu": 0.8, "cpu": 0.3, "mem": 0.2}
+QUEUE_FACTOR = 2.0
+RECOVERY_CAP = 0.99
+
 
 @dataclass
 class LoadState:
@@ -78,9 +86,9 @@ class TIDE:
             return
         st = self._st(island_id)
         w = work / max(island.capacity_units, 1e-6)
-        st.gpu = min(1.0, st.gpu + 0.8 * w)
-        st.cpu = min(1.0, st.cpu + 0.3 * w)
-        st.mem = min(1.0, st.mem + 0.2 * w)
+        st.gpu = min(1.0, st.gpu + LOAD_MIX["gpu"] * w)
+        st.cpu = min(1.0, st.cpu + LOAD_MIX["cpu"] * w)
+        st.mem = min(1.0, st.mem + LOAD_MIX["mem"] * w)
         st.inflight += w
 
     # ----------------------------------------------------------- capacity
@@ -128,7 +136,7 @@ class TIDE:
                 return False
             return True
         # fallen back: require the recovery threshold (dead zone) to return
-        if r >= min(req + DEAD_ZONE, 0.99):
+        if r >= min(req + DEAD_ZONE, RECOVERY_CAP):
             st.local_ok = True
             return True
         return False
@@ -141,7 +149,7 @@ class TIDE:
         if island.unbounded or self.crashed:
             return island.latency_ms
         st = self._st(island.island_id)
-        return island.latency_ms * (1.0 + 2.0 * st.inflight)
+        return island.latency_ms * (1.0 + QUEUE_FACTOR * st.inflight)
 
     def predict_exhaustion_s(self, island_id: str):
         """Seconds until R hits 0 at the current EWMA slope (None if

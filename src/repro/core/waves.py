@@ -187,7 +187,12 @@ class WAVES:
         return self._finish(req, best, s_r, "routed",
                             n_candidates=len(candidates))
 
-    def _finish(self, req, island, s_r, reason, n_candidates=1) -> Decision:
+    def _finish(self, req, island, s_r, reason, n_candidates=1,
+                account_load=True) -> Decision:
+        # account_load=False: the batched tick router (core.routing_jax.
+        # route_batch_tick) has already accounted the load inside its greedy
+        # pass and written it back to TIDE; only the sanitize/session logic
+        # runs here.
         # trust-boundary transition (Def. 4): sanitize history when moving
         # to a lower-privacy island; Tier 3 is always sanitized; the
         # personal group (P=1.0) bypasses MIST entirely.
@@ -204,7 +209,8 @@ class WAVES:
                 seed=self._seed + self._session)
             hist = tuple(texts)
         score = self.composite_score(island, req)
-        self.tide.add_load(island.island_id, work=1.0)
+        if account_load:
+            self.tide.add_load(island.island_id, work=1.0)
         return Decision(island, True, reason, s_r,
                         score=score,
                         sanitize=needs_sanitize,

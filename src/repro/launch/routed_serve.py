@@ -46,11 +46,16 @@ def build(arch: str, shape_name: str, migrate_cache: bool):
     serve = make_serve_step(model, window=window)
     B = shape.global_batch
 
-    def routed_step(params, cache, token, pos, tbl, sens, weights):
+    def routed_step(params, cache, token, pos, tbl, sens, weights, state):
         reqs = rj.pack_requests(sens, jnp.zeros((B,), jnp.float32))
-        assign, feasible, _ = rj.route_batch(tbl, reqs, weights)
-        # island index -> pod id (islands 0..n/2-1 on pod 0, rest pod 1)
         n_islands = tbl.privacy.shape[0]
+        # capacity-aware tick router fused into the serve step: the greedy
+        # in-kernel pass decrements bounded-island capacity per assignment,
+        # so one decode step cannot oversubscribe an island group (pod)
+        extra_ok = jnp.ones((B, n_islands), bool)
+        assign, feasible, _, _, _, new_state = rj.route_batch_tick(
+            tbl, reqs, weights, state, extra_ok)
+        # island index -> pod id (islands 0..n/2-1 on pod 0, rest pod 1)
         pod = jnp.where(assign >= 0, assign * 2 // n_islands, 0)
         order = jnp.argsort(pod, stable=True)     # group requests by pod
         token_r = jnp.take(token, order, axis=0)
@@ -60,7 +65,9 @@ def build(arch: str, shape_name: str, migrate_cache: bool):
                 and c.shape[0] == B else c, cache)
         logits, cache = serve(params, cache, token_r, pos)
         inv = jnp.argsort(order)
-        return jnp.take(logits, inv, axis=0), cache, assign
+        # new_state threads the in-step load accounting to the next decode
+        # step, so successive steps don't re-route against a stale snapshot
+        return jnp.take(logits, inv, axis=0), cache, assign, new_state
 
     with axis_rules(mesh):
         params_abs = model.abstract()
@@ -86,12 +93,17 @@ def build(arch: str, shape_name: str, migrate_cache: bool):
         )
         sens = jax.ShapeDtypeStruct((B,), jnp.float32)
         w = jax.ShapeDtypeStruct((3,), jnp.float32)
+        fvec = jax.ShapeDtypeStruct((n_islands,), jnp.float32)
+        state = {k: fvec for k in ("cpu", "gpu", "mem", "inflight",
+                                   "base_latency", "w_unit")}
+        state["local_ok"] = jax.ShapeDtypeStruct((n_islands,), bool)
         jf = jax.jit(routed_step,
                      in_shardings=(params_sh, cache_sh, tok_sh, None, None,
-                                   None, None),
-                     out_shardings=(None, cache_sh, None))
+                                   None, None, None),
+                     out_shardings=(None, cache_sh, None, None))
         lowered = jf.lower(params_abs, cache_abs, tok,
-                           jax.ShapeDtypeStruct((), jnp.int32), tbl, sens, w)
+                           jax.ShapeDtypeStruct((), jnp.int32), tbl, sens, w,
+                           state)
     return lowered, mesh
 
 

@@ -4,6 +4,11 @@ Boots a three-tier island mesh (personal laptop+phone, private edge, public
 cloud), serves a real reduced model on the laptop SHORE island, routes a
 healthcare workload through WAVES and prints the per-island distribution,
 privacy accounting and latency percentiles.
+
+``--batched`` swaps the per-request Algorithm-1 loop for the tick-based
+batched orchestrator: the whole pending pool is routed per scheduling tick
+through the capacity-aware ``route_batch_tick`` kernel and SHORE work runs
+through per-island continuous batchers.
 """
 from __future__ import annotations
 
@@ -54,6 +59,12 @@ def main(argv=None):
     ap.add_argument("--mode", default="scalarized",
                     choices=("scalarized", "constraint"))
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--batched", action="store_true",
+                    help="tick-based batched orchestrator instead of the "
+                         "per-request loop")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="continuous-batching decode slots per SHORE island "
+                         "(--batched only)")
     ap.add_argument("--train-classifier", action="store_true",
                     help="train the MIST stage-2 JAX classifier first")
     args = ap.parse_args(argv)
@@ -67,13 +78,24 @@ def main(argv=None):
 
     reg, waves = build_mesh(Policy(mode=args.mode), args.buffer, clf)
     cfg = get_config(args.arch).reduced()
-    servers = {"laptop": LocalModelServer(cfg, max_len=128, seed=args.seed),
-               "home-nas": LocalModelServer(cfg, max_len=128, seed=args.seed)}
-    eng = InferenceEngine(waves, reg, servers, seed=args.seed)
-
     wl = healthcare_workload(args.requests, seed=args.seed)
+    if args.batched:
+        from repro.serving.batcher import ContinuousBatcher
+        from repro.serving.engine import TickOrchestrator
+        batchers = {iid: ContinuousBatcher(cfg, num_slots=args.slots,
+                                           max_len=128, seed=args.seed)
+                    for iid in ("laptop", "home-nas")}
+        eng = TickOrchestrator(waves, reg, batchers, seed=args.seed)
+    else:
+        servers = {"laptop": LocalModelServer(cfg, max_len=128,
+                                              seed=args.seed),
+                   "home-nas": LocalModelServer(cfg, max_len=128,
+                                                seed=args.seed)}
+        eng = InferenceEngine(waves, reg, servers, seed=args.seed)
     for req, kind in wl:
         eng.submit(req, max_new_tokens=args.max_new_tokens)
+    if args.batched:
+        eng.run_until_done()
     print(json.dumps(eng.stats(), indent=1))
     return eng
 

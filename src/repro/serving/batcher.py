@@ -2,16 +2,22 @@
 
 Fixed decode slots over one shared KV cache: requests prefill into a free
 slot (per-slot position tracking), every engine tick runs ONE batched decode
-step for all active slots, finished sequences free their slot immediately
-for queued requests — the standard continuous-batching loop (vLLM-style,
+step for all slots, finished sequences free their slot immediately for
+queued requests — the standard continuous-batching loop (vLLM-style,
 simplified to slot granularity) on top of this repo's models.
 
-Implementation notes for slot-granular caches:
-* the model's decode step takes a scalar position, so the batcher tracks
-  per-slot positions and passes the max; attention masks per-slot validity
-  via the position array written into the cache (each slot's K/V beyond its
-  own length are zeros and masked by value — acceptable at slot granularity
-  because rope positions are per-slot correct).
+Implementation notes:
+* the per-slot caches live STACKED in a single pytree with a leading
+  (num_slots,) axis; the decode step is ``jax.vmap``-ed over that axis (and
+  over per-slot token/position), so one XLA dispatch advances every slot —
+  per-slot ragged positions are handled by vmap without touching the model.
+* admission prefills one request at a time (exact prompt length, no pad
+  waste) and writes the fresh cache into its slot row with a donated
+  ``dynamic_update_index_in_dim``.
+* inactive slots decode a dummy token at position 0; their row is fully
+  overwritten at the next admission, so the garbage never escapes. This is
+  the usual padded-batch tradeoff: wasted FLOPs on idle slots in exchange
+  for a single fused dispatch.
 """
 from __future__ import annotations
 
@@ -38,6 +44,14 @@ class SlotState:
     max_new: int = 16
 
 
+def _write_slot(stacked, one, si):
+    """Write a (1, ...)-shaped cache pytree into row ``si`` of the stacked
+    (num_slots, 1, ...) cache."""
+    return jax.tree.map(
+        lambda s, o: jax.lax.dynamic_update_index_in_dim(
+            s, o.astype(s.dtype), si, 0), stacked, one)
+
+
 class ContinuousBatcher:
     def __init__(self, cfg, params=None, num_slots=4, max_len=256,
                  seed=0, dtype="float32", temperature=0.0):
@@ -50,18 +64,21 @@ class ContinuousBatcher:
         self.temperature = temperature
         self.tok = ByteTokenizer(cfg.vocab_size)
         self.key = jax.random.PRNGKey(seed + 1)
-        # one cache per slot: prefill writes are per-slot full-seq ops
-        self._slot_cache = [self.model.init_cache(1, max_len,
-                                                  dtype=jnp.bfloat16)
-                            for _ in range(num_slots)]
+        # stacked slot caches: leading axis = slot
+        one = self.model.init_cache(1, max_len, dtype=jnp.bfloat16)
+        self._cache = jax.tree.map(
+            lambda x: jnp.zeros((num_slots,) + x.shape, x.dtype), one)
         self.slots = [SlotState() for _ in range(num_slots)]
         self.queue: list = []
         self.finished: dict[int, str] = {}
         self._next_id = 0
         self._prefill = jax.jit(make_prefill_step(self.model))
-        self._decode = jax.jit(make_serve_step(self.model))
+        self._decode_all = jax.jit(
+            jax.vmap(make_serve_step(self.model), in_axes=(None, 0, 0, 0)),
+            donate_argnums=(1,))
+        self._write = jax.jit(_write_slot, donate_argnums=(0,))
         self.stats = {"ticks": 0, "prefills": 0, "decode_tokens": 0,
-                      "queued_peak": 0}
+                      "decode_steps": 0, "queued_peak": 0}
 
     # --------------------------------------------------------- submission
     def submit(self, prompt: str, max_new_tokens=16) -> int:
@@ -83,7 +100,7 @@ class ContinuousBatcher:
                                           dtype=jnp.bfloat16)
             logits, cache = self._prefill(self.params, cache,
                                           {"tokens": toks})
-            self._slot_cache[si] = cache
+            self._cache = self._write(self._cache, cache, jnp.int32(si))
             tok0 = int(jnp.argmax(logits[0]))
             self.slots[si] = SlotState(active=True, request_id=rid,
                                        pos=len(ids), prompt_len=len(ids),
@@ -92,19 +109,26 @@ class ContinuousBatcher:
 
     # --------------------------------------------------------------- tick
     def tick(self):
-        """Admit from queue, then one decode step per active slot."""
+        """Admit from queue, then ONE fused decode step for all slots."""
         self._admit()
         self.stats["ticks"] += 1
-        for si, s in enumerate(self.slots):
-            if not s.active:
-                continue
-            tok = jnp.asarray([[s.generated[-1]]], jnp.int32)
-            logits, cache = self._decode(self.params, self._slot_cache[si],
-                                         tok, jnp.int32(s.pos))
-            self._slot_cache[si] = cache
-            self.key, k = jax.random.split(self.key)
-            nxt = int(sample(logits, k, self.temperature)[0])
-            s.generated.append(nxt)
+        active = [si for si, s in enumerate(self.slots) if s.active]
+        if not active:
+            return
+        toks = np.zeros((self.num_slots, 1, 1), np.int32)
+        poss = np.zeros((self.num_slots,), np.int32)
+        for si in active:
+            s = self.slots[si]
+            toks[si, 0, 0] = s.generated[-1]
+            poss[si] = s.pos
+        logits, self._cache = self._decode_all(
+            self.params, self._cache, jnp.asarray(toks), jnp.asarray(poss))
+        self.key, k = jax.random.split(self.key)
+        nxt = np.asarray(sample(logits[:, 0, :], k, self.temperature))
+        self.stats["decode_steps"] += 1
+        for si in active:
+            s = self.slots[si]
+            s.generated.append(int(nxt[si]))
             s.pos += 1
             self.stats["decode_tokens"] += 1
             done = (len(s.generated) >= s.max_new
@@ -113,9 +137,11 @@ class ContinuousBatcher:
                 self.finished[s.request_id] = self.tok.decode(s.generated)
                 self.slots[si] = SlotState()
 
+    def busy(self) -> bool:
+        return bool(self.queue) or any(s.active for s in self.slots)
+
     def run_until_done(self, max_ticks=10_000):
-        while (self.queue or any(s.active for s in self.slots)) \
-                and self.stats["ticks"] < max_ticks:
+        while self.busy() and self.stats["ticks"] < max_ticks:
             self.tick()
         return self.finished
 

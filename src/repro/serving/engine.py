@@ -1,13 +1,27 @@
 """Inference engine: WAVES routing wired to island executors.
 
+Two serving frontends share the executors and metrics:
+
+* ``InferenceEngine`` — the paper's per-request Algorithm-1 loop: each
+  ``submit()`` routes one request through scalar WAVES and runs a one-shot
+  ``LocalModelServer.generate()``. Kept as the demo path and as the decision
+  ORACLE the batched path is tested against.
+* ``TickOrchestrator`` — the throughput path: ``submit()`` only enqueues;
+  each scheduling ``tick()`` routes the whole pending pool in ONE
+  ``route_batch_tick`` kernel call (capacity-aware within the tick),
+  dispatches SHORE work through per-island ``ContinuousBatcher``s and
+  HORIZON work as virtual-time async completions, then drains finished
+  sequences through MIST desanitization.
+
 SHORE islands execute a real JAX model (prefill + decode against the
 engine's KV-cache manager). HORIZON islands are latency/cost-simulated
 cloud APIs whose responses may reference placeholders — exercising the MIST
 backward pass (de-anonymization) end to end.
 
-Time is virtual: each submit() advances the TIDE/LIGHTHOUSE clocks by the
-simulated service latency, so capacity dynamics, hysteresis and rate limits
-behave deterministically in tests and benchmarks.
+Time is virtual: the per-request engine advances the TIDE/LIGHTHOUSE clocks
+by the simulated service latency of each submit(); the orchestrator advances
+them by a fixed interval per tick, so capacity dynamics, hysteresis and rate
+limits behave deterministically in tests and benchmarks.
 """
 from __future__ import annotations
 
@@ -21,6 +35,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import routing_jax as rj
 from repro.core.islands import TIER_CLOUD, TIER_PERSONAL
 from repro.core.waves import Decision, Request
 from repro.data.tokenizer import ByteTokenizer
@@ -142,22 +157,321 @@ class InferenceEngine:
 
     # ----------------------------------------------------------- metrics
     def stats(self):
-        n = len(self.log)
-        if n == 0:
-            return {"n": 0, "rejected": len(self.rejected)}
-        lat = sorted(r.latency_ms for r in self.log)
-        by_island = {}
-        for r in self.log:
-            by_island[r.island_id] = by_island.get(r.island_id, 0) + 1
-        viol = sum(1 for r in self.log
-                   if r.sensitivity > self.registry.get(r.island_id).privacy)
-        return {
-            "n": n,
-            "rejected": len(self.rejected),
-            "cost_total": sum(r.cost for r in self.log),
-            "latency_p50": lat[n // 2],
-            "latency_p95": lat[min(n - 1, int(0.95 * n))],
-            "privacy_violations": viol,
-            "sanitized": sum(1 for r in self.log if r.sanitized),
-            "by_island": by_island,
-        }
+        return aggregate_stats(self.log, self.rejected, self.registry)
+
+
+def aggregate_stats(log, rejected, registry):
+    """Shared serving metrics for both frontends: counts, cost, latency
+    percentiles, privacy accounting and the per-island distribution."""
+    n = len(log)
+    if n == 0:
+        return {"n": 0, "rejected": len(rejected)}
+    lat = sorted(r.latency_ms for r in log)
+    by_island = {}
+    for r in log:
+        by_island[r.island_id] = by_island.get(r.island_id, 0) + 1
+    viol = sum(1 for r in log
+               if r.sensitivity > registry.get(r.island_id).privacy)
+    return {
+        "n": n,
+        "rejected": len(rejected),
+        "cost_total": sum(r.cost for r in log),
+        "latency_p50": lat[n // 2],
+        "latency_p95": lat[min(n - 1, int(0.95 * n))],
+        "privacy_violations": viol,
+        "sanitized": sum(1 for r in log if r.sanitized),
+        "by_island": by_island,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Tick-based batched orchestration
+
+
+@dataclass
+class PendingRequest:
+    rid: int
+    req: Request
+    max_new_tokens: int
+    submitted_at: float        # virtual clock at submission
+
+
+class TickOrchestrator:
+    """Batched scheduling-tick serving loop.
+
+    ``submit()`` enqueues; every ``tick()``:
+
+    1. packs the pending pool and routes it in ONE ``route_batch_tick``
+       call — the greedy in-kernel pass decrements bounded-island capacity
+       per assignment, so a single tick cannot oversubscribe an island;
+    2. writes the kernel-final TIDE state back so the next tick continues
+       from the batch's load;
+    3. dispatches accepted SHORE requests into that island's
+       ``ContinuousBatcher`` (islands without a batcher fall back to the
+       latency-simulated executor, like the per-request engine) and HORIZON
+       requests as simulated async completions;
+    4. runs up to ``decode_ticks_per_tick`` continuous-batching decode
+       steps per island and completes finished sequences through MIST
+       desanitization;
+    5. advances the virtual clocks by ``tick_interval_s`` and releases
+       simulated completions whose latency has elapsed.
+
+    Scalar ``waves.route`` stays the decision oracle: the batched pool is
+    decision-equivalent to routing the same requests sequentially at a
+    frozen clock (see tests/test_orchestrator.py). Registered extension
+    agents are arbitrary Python scoring callables the kernel cannot
+    represent, so their presence falls the pool back to the scalar path.
+    """
+
+    def __init__(self, waves, registry, batchers=None, seed=0,
+                 decode_ticks_per_tick=4, tick_interval_s=0.05):
+        self.waves = waves
+        self.registry = registry
+        self.batchers = batchers or {}
+        self.cloud = CloudSimulator(seed)
+        self.decode_ticks_per_tick = decode_ticks_per_tick
+        self.tick_interval_s = tick_interval_s
+        self.pending: list[PendingRequest] = []
+        self.results: dict[int, Optional[Response]] = {}
+        self._local_inflight: dict[tuple, tuple] = {}
+        self._sim_inflight: list = []
+        self.log: list[Response] = []
+        self.rejected: list[Decision] = []
+        self._next_rid = 0
+        self._util_sum: dict[str, float] = {}
+        self._util_n: dict[str, int] = {}
+        self.tick_stats = {"ticks": 0, "route_calls": 0, "routed": 0,
+                           "decode_ticks": 0, "pool_peak": 0}
+
+    # --------------------------------------------------------- submission
+    def submit(self, req: Request, max_new_tokens=12) -> int:
+        """Enqueue; returns a request id resolved in ``results`` once the
+        request completes (None if rejected)."""
+        rid = self._next_rid
+        self._next_rid += 1
+        self.pending.append(PendingRequest(rid, req, max_new_tokens,
+                                           self.waves.tide.clock))
+        self.tick_stats["pool_peak"] = max(self.tick_stats["pool_peak"],
+                                           len(self.pending))
+        return rid
+
+    def submit_sync(self, req: Request, max_new_tokens=12,
+                    max_ticks=10_000) -> Optional[Response]:
+        """Blocking submit for session/chat callers: ticks until this
+        request resolves."""
+        rid = self.submit(req, max_new_tokens)
+        ticks = 0
+        while rid not in self.results and ticks < max_ticks:
+            self.tick()
+            ticks += 1
+        return self.results.get(rid)
+
+    # ------------------------------------------------------------ routing
+    def route_pool(self, reqs: list) -> list:
+        """Route a list of Requests exactly as one scheduling tick would
+        (used directly by the parity tests); returns one Decision per
+        request, in order."""
+        pool = [PendingRequest(-1 - i, r, 0, self.waves.tide.clock)
+                for i, r in enumerate(reqs)]
+        return self._route_pool(pool)
+
+    def _route_pool(self, pool) -> list:
+        waves = self.waves
+        pol = waves.policy
+        if waves._extra_agents:
+            # extension agents are opaque Python callables — keep their
+            # semantics by delegating the whole pool to the scalar oracle
+            return [waves.route(p.req) for p in pool]
+        decisions: list = [None] * len(pool)
+        live = []                        # (pool index, sensitivity)
+        for idx, p in enumerate(pool):
+            if not waves._limiter.allow(p.req.user, waves.tide.clock):
+                decisions[idx] = Decision(None, False, "rate_limited", -1.0)
+                continue
+            s_r = (p.req.sensitivity_override
+                   if p.req.sensitivity_override is not None
+                   else waves.mist.analyze(p.req.query).score)
+            live.append((idx, s_r))
+        islands = waves.lighthouse.get_islands()
+        if not live:
+            return decisions
+        if not islands:
+            for idx, s_r in live:
+                decisions[idx] = Decision(None, False, "infeasible", s_r)
+            return decisions
+
+        ds_ids = sorted({pool[idx].req.dataset for idx, _ in live
+                         if pool[idx].req.dataset})
+        # dataset count also keys compilation — pad the table columns to a
+        # power of two with names no island declares (all-False columns)
+        if ds_ids:
+            ds_cols = 1 << (len(ds_ids) - 1).bit_length()
+            ds_ids_padded = ds_ids + [f"__pad{i}"
+                                      for i in range(ds_cols - len(ds_ids))]
+        else:
+            ds_ids_padded = []
+        tbl = rj.pack_islands(islands, ds_ids_padded, waves.tide,
+                              pol.trust_mode)
+        # bucket the pool to the next power of two so online serving (a
+        # different m every tick) compiles O(log m) kernel shapes, not one
+        # per pool size. Padding rows carry sensitivity 2.0: infeasible on
+        # every island (privacy <= 1), never queued (queue_local needs
+        # privacy >= s_r too), so they add no load and touch no hysteresis.
+        m = len(live)
+        M = 1 << (m - 1).bit_length()
+        pad = M - m
+        reqs = rj.pack_requests(
+            [s for _, s in live] + [2.0] * pad,
+            [waves.tide.threshold(pool[idx].req.priority)
+             for idx, _ in live] + [0.0] * pad,
+            [pool[idx].req.deadline_ms for idx, _ in live]
+            + [math.inf] * pad,
+            [ds_ids.index(pool[idx].req.dataset)
+             if pool[idx].req.dataset else -1 for idx, _ in live]
+            + [-1] * pad,
+            [pool[idx].req.priority == "primary" for idx, _ in live]
+            + [False] * pad,
+            n_datasets=max(len(ds_ids), 1))
+        # request×island constraints outside the packed tables
+        extra = np.ones((M, len(islands)), bool)
+        for row, (idx, _) in enumerate(live):
+            r = pool[idx].req
+            for col, isl in enumerate(islands):
+                if r.model and isl.models and r.model not in isl.models:
+                    extra[row, col] = False
+                if pol.allowed_jurisdictions is not None and \
+                        isl.jurisdiction not in pol.allowed_jurisdictions:
+                    extra[row, col] = False
+        state = rj.pack_tide_state(islands, waves.tide)
+        budget = (pol.budget_per_request
+                  if pol.budget_per_request is not None else np.inf)
+        weights = jnp.array([pol.w_cost, pol.w_latency, pol.w_privacy],
+                            jnp.float32)
+        assign, acc, que, score, ncand, new_state = rj.route_batch_tick(
+            tbl, reqs, weights, state, jnp.asarray(extra),
+            mode=pol.mode, on_infeasible=pol.on_infeasible, budget=budget,
+            min_trust=pol.min_trust, cost_scale=pol.cost_scale,
+            latency_scale=pol.latency_scale_ms)
+        rj.unpack_tide_state(new_state, islands, waves.tide)
+        assign = np.asarray(assign)
+        acc = np.asarray(acc)
+        que = np.asarray(que)
+        score = np.asarray(score)
+        ncand = np.asarray(ncand)
+        for row, (idx, s_r) in enumerate(live):
+            if not acc[row]:
+                decisions[idx] = Decision(None, False, "infeasible", s_r)
+                continue
+            island = islands[int(assign[row])]
+            reason = "queued_local" if que[row] else "routed"
+            # queued_local: the scalar path reports the _finish default (1),
+            # not the zero feasible islands the kernel counted
+            d = waves._finish(pool[idx].req, island, s_r, reason,
+                              n_candidates=1 if que[row]
+                              else int(ncand[row]),
+                              account_load=False)
+            d.score = float(score[row])
+            decisions[idx] = d
+        self.tick_stats["route_calls"] += 1
+        return decisions
+
+    # --------------------------------------------------------------- tick
+    def tick(self) -> list:
+        """One scheduling tick; returns the Responses completed in it."""
+        waves = self.waves
+        completed: list[Response] = []
+        pool, self.pending = self.pending, []
+        if pool:
+            for p, d in zip(pool, self._route_pool(pool)):
+                if not d.accepted:
+                    self.rejected.append(d)
+                    self.results[p.rid] = None
+                    continue
+                self.tick_stats["routed"] += 1
+                island = d.island
+                query = (d.sanitized_history[-1] if d.sanitize
+                         else p.req.query)
+                b = self.batchers.get(island.island_id)
+                if b is not None:
+                    brid = b.submit(query, p.max_new_tokens)
+                    self._local_inflight[(island.island_id, brid)] = (p, d)
+                else:
+                    text, exec_ms = self.cloud.complete(island, query)
+                    ready = waves.tide.clock + \
+                        (island.latency_ms + exec_ms) / 1000.0
+                    self._sim_inflight.append((ready, p, d, text, exec_ms))
+        # SHORE: continuous-batching decode steps
+        for iid, b in self.batchers.items():
+            for _ in range(self.decode_ticks_per_tick):
+                if not b.busy():
+                    break
+                b.tick()
+                self.tick_stats["decode_ticks"] += 1
+                self._util_sum[iid] = self._util_sum.get(iid, 0.0) \
+                    + b.utilization()
+                self._util_n[iid] = self._util_n.get(iid, 0) + 1
+            for brid in list(b.finished):
+                key = (iid, brid)
+                if key not in self._local_inflight:
+                    continue           # submitted outside the orchestrator
+                p, d = self._local_inflight.pop(key)
+                completed.append(self._complete(p, d, b.finished.pop(brid)))
+        # advance virtual time
+        waves.tide.advance(self.tick_interval_s)
+        waves.lighthouse.advance(self.tick_interval_s)
+        for isl in self.registry.all():
+            waves.lighthouse.heartbeat(isl.island_id)
+        # HORIZON / simulated completions whose latency has elapsed
+        still = []
+        for ready, p, d, text, exec_ms in self._sim_inflight:
+            if ready <= waves.tide.clock:
+                # elapsed virtual time already contains the island's base
+                # latency (it set the ready time) — don't add it again
+                completed.append(self._complete(p, d, text, exec_ms,
+                                                include_base=False))
+            else:
+                still.append((ready, p, d, text, exec_ms))
+        self._sim_inflight = still
+        self.tick_stats["ticks"] += 1
+        return completed
+
+    def _complete(self, p, d, text, exec_ms=0.0,
+                  include_base=True) -> Response:
+        if d.sanitize and d.placeholder_store is not None:
+            text = self.waves.mist.desanitize(text, d.placeholder_store)
+        elapsed = (self.waves.tide.clock - p.submitted_at) * 1000.0
+        latency = max(elapsed, exec_ms)
+        if include_base:                 # local exec: add the network RTT
+            latency += d.island.latency_ms
+        resp = Response(text=text, island_id=d.island.island_id,
+                        latency_ms=latency,
+                        cost=d.island.cost_per_request,
+                        sensitivity=d.sensitivity, sanitized=d.sanitize,
+                        decision=d)
+        self.log.append(resp)
+        self.results[p.rid] = resp
+        return resp
+
+    # ------------------------------------------------------------ control
+    def busy(self) -> bool:
+        return bool(self.pending or self._local_inflight
+                    or self._sim_inflight)
+
+    def run_until_done(self, max_ticks=10_000) -> list:
+        """Tick until every submitted request has resolved; returns the
+        Responses completed during the run."""
+        out = []
+        while self.busy() and self.tick_stats["ticks"] < max_ticks:
+            out.extend(self.tick())
+        return out
+
+    # ----------------------------------------------------------- metrics
+    def stats(self):
+        s = aggregate_stats(self.log, self.rejected, self.registry)
+        s.update(self.tick_stats)
+        # mean slot occupancy across the decode ticks actually run (the
+        # instantaneous value is always 0.0 once the queue has drained)
+        s["utilization"] = {iid: self._util_sum.get(iid, 0.0)
+                            / max(self._util_n.get(iid, 0), 1)
+                            for iid in self.batchers}
+        return s

@@ -36,9 +36,15 @@ class SessionManager:
         return self.sessions.setdefault(session_id, Session(**kw))
 
     def chat(self, session_id: str, query: str, max_new_tokens=8, **kw):
-        """Route + execute one turn; maintain history and trust level."""
+        """Route + execute one turn; maintain history and trust level.
+
+        Works against both frontends: the per-request ``InferenceEngine``
+        (submit returns the Response directly) and the ``TickOrchestrator``
+        (submit only enqueues — use its blocking ``submit_sync``, which
+        ticks the scheduling loop until this turn resolves)."""
         s = self.get(session_id)
-        resp = self.engine.submit(s.request(query, **kw), max_new_tokens)
+        submit = getattr(self.engine, "submit_sync", self.engine.submit)
+        resp = submit(s.request(query, **kw), max_new_tokens)
         if resp is None:
             return None
         s.history.append(query)

@@ -1,0 +1,41 @@
+"""Optional-`hypothesis` shim.
+
+The container does not ship `hypothesis`; importing it at module top level
+used to kill the WHOLE tier-1 run at collection. Test modules import
+`given`/`settings`/`st` from here instead: with hypothesis installed they
+are the real thing, without it `@given(...)` turns each property test into
+an individually-skipped test while every example-based test in the same
+module keeps running.
+"""
+from __future__ import annotations
+
+import pytest
+
+try:
+    from hypothesis import assume, given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+        return deco
+
+    def assume(_condition):
+        return True
+
+    class _Strategy:
+        """Stand-in whose every attribute is a callable returning itself,
+        so strategy expressions like st.floats(0, 1).map(f) evaluate."""
+
+        def __getattr__(self, _name):
+            return lambda *a, **k: self
+
+        def __call__(self, *a, **k):
+            return self
+
+    st = _Strategy()

@@ -2,7 +2,7 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_shim import given, settings, st
 
 from repro.core.islands import (Island, IslandRegistry, RegistrationError,
                                 TIER_CLOUD, TIER_PERSONAL, cloud_island,

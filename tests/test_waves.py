@@ -4,7 +4,7 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_shim import given, settings, st
 
 from repro.core import routing_jax as rj
 from repro.core.islands import TIER_CLOUD, TIER_PERSONAL
