@@ -1,5 +1,7 @@
-"""Quickstart: boot a three-tier island mesh, route requests through
-IslandRun, and watch the privacy machinery work.
+"""Quickstart: boot a three-tier island mesh and serve concurrent requests
+end-to-end through the tick-batched orchestrator — batched WAVES routing,
+trust-tiered paged KV cache on the SHORE islands, MIST sanitization across
+trust boundaries, and real decoded tokens back for every request.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -8,13 +10,14 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
+from repro.configs.base import get_config
 from repro.core.islands import (IslandRegistry, cloud_island, edge_island,
                                 personal_island)
 from repro.core.lighthouse import Lighthouse
 from repro.core.mist import MIST
-from repro.core.mist_model import train_classifier
 from repro.core.tide import TIDE
 from repro.core.waves import WAVES, Policy, Request
+from repro.serving.engine import TickOrchestrator, build_island_batchers
 
 
 def main():
@@ -28,49 +31,53 @@ def main():
     ]:
         reg.register(isl, reg.attestation_token(isl.island_id))
 
-    # 2. Agents: MIST (with the JAX stage-2 classifier), TIDE, LIGHTHOUSE
-    print("training MIST stage-2 classifier (JAX, in-repo)...")
-    clf = train_classifier(steps=150, n_per_class=100)
-    print(f"  train accuracy: {clf.train_accuracy:.3f}")
-    mist = MIST(classifier=clf)
+    # 2. Agents: MIST, TIDE, LIGHTHOUSE behind the batched WAVES frontend
+    mist = MIST()
     tide = TIDE(reg, buffer="moderate")
     lh = Lighthouse(reg)
     for i in reg.all():
         lh.heartbeat(i.island_id)
     waves = WAVES(mist, tide, lh, Policy())
 
-    # 3. Route the paper's motivating examples
+    # 3. A real (reduced) model on every SHORE island, decoding through the
+    #    trust-tiered paged KV pool (pool size follows island capacity)
+    cfg = get_config("smollm-135m").reduced()
+    print("building per-island paged batchers...")
+    batchers = build_island_batchers(cfg, reg, cache="paged", max_len=96)
+    orch = TickOrchestrator(waves, reg, batchers)
+
+    # 4. Submit the paper's motivating examples CONCURRENTLY; every tick
+    #    routes the whole pending pool in one kernel call and advances all
+    #    islands' continuous batchers in fused decode steps
     queries = [
         ("Analyze treatment options for 45-year-old diabetic patient "
          "John Doe with elevated HbA1c", "primary"),
         ("What are common diabetes complications", "burstable"),
-        ("password = hunter2, please rotate the production key", "secondary"),
+        ("password = hunter2, please rotate the production key",
+         "secondary"),
         ("best hiking trails near mountains", "burstable"),
     ]
-    print("\nrouting decisions:")
-    for q, prio in queries:
-        d = waves.route(Request(query=q, priority=prio))
-        where = d.island.island_id if d.accepted else f"REJECTED({d.reason})"
-        print(f"  s_r={d.sensitivity:.2f} -> {where:18s} | {q[:58]}")
-        tide.advance(0.5)
+    rids = {orch.submit(Request(query=q, priority=prio), max_new_tokens=8):
+            (q, prio) for q, prio in queries}
+    orch.run_until_done()
 
-    # 4. Cross-trust-boundary sanitization (reversible typed placeholders)
-    print("\ntrust-boundary sanitization:")
-    history = ("Patient John Doe visited Chicago hospital, SSN 123-45-6789",)
-    # force a cloud route with a low-sensitivity follow-up
-    for i in reg.all():
-        if not i.unbounded:
-            st = tide._st(i.island_id)
-            st.cpu = st.gpu = st.mem = 0.99
-    d = waves.route(Request(query="thanks, what should he read next",
-                            history=history, priority="burstable",
-                            prev_privacy=1.0))
-    print(f"  routed to {d.island.island_id} (tier 3), sanitize={d.sanitize}")
-    for t in d.sanitized_history:
-        print(f"  cloud sees : {t}")
-    cloud_reply = f"Based on the history, {d.sanitized_history[0].split()[1]} should rest."
-    print(f"  cloud says : {cloud_reply}")
-    print(f"  user sees  : {mist.desanitize(cloud_reply, d.placeholder_store)}")
+    print(f"\n{len(rids)} concurrent requests, "
+          f"{orch.tick_stats['ticks']} scheduling ticks:")
+    for rid, (q, prio) in rids.items():
+        r = orch.results.get(rid)
+        if r is None:
+            print(f"  REJECTED              | {q[:52]}")
+            continue
+        toks = repr(r.text[:28])
+        print(f"  s_r={r.sensitivity:.2f} -> {r.island_id:10s} "
+              f"sanitized={str(r.sanitized):5s} tokens={toks} | {q[:40]}")
+
+    # 5. KV-pool telemetry: page occupancy and trust-tiered prefix sharing
+    print("\nKV page pools (via LIGHTHOUSE telemetry):")
+    for iid, t in sorted(orch.stats().get("kv_pools", {}).items()):
+        print(f"  {iid:10s} pages={t['in_use']}/{t['num_pages']} "
+              f"peak={t['peak_in_use']} share_hit_rate={t['share_hit_rate']}"
+              f" cow={t['cow_copies']}")
 
 
 if __name__ == "__main__":

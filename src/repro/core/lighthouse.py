@@ -19,6 +19,7 @@ class Lighthouse:
         self._cache: list = []
         self.crashed = False
         self.discovery_queries = 0
+        self._pool_stats: dict[str, dict] = {}
 
     def advance(self, dt: float):
         self.clock += dt
@@ -34,6 +35,18 @@ class Lighthouse:
     def is_alive(self, island_id: str) -> bool:
         t = self._last_beat.get(island_id)
         return t is not None and (self.clock - t) <= self.timeout
+
+    # --------------------------------------------------------- telemetry
+    def report_pool(self, island_id: str, stats: dict):
+        """Publish a SHORE island's KV page-pool counters (occupancy,
+        prefix-share hit rate, COW copies, blocked admissions) with a
+        heartbeat timestamp; ``pool_telemetry()`` is the mesh-wide view the
+        dashboards/benchmarks read."""
+        if island_id in self.registry:
+            self._pool_stats[island_id] = dict(stats, reported_at=self.clock)
+
+    def pool_telemetry(self) -> dict:
+        return {iid: dict(s) for iid, s in self._pool_stats.items()}
 
     def get_islands(self) -> list:
         """Live islands; cached list when crashed (conservative fallback)."""

@@ -141,6 +141,25 @@ class TIDE:
             return True
         return False
 
+    def report_pool_pressure(self, island_id: str, occupancy: float,
+                             blocked: int = 0):
+        """KV page-pool pressure feedback from a SHORE island's serving
+        stack (serving.kvpool): pool occupancy raises the island's ``mem``
+        utilization — cutting capacity R = 1 - max(cpu, gpu, mem) and with
+        it admission — while admissions blocked on page exhaustion count as
+        queued inflight work, inflating the queueing-latency term the
+        routing kernel scores (route_batch_tick packs ``inflight`` via
+        pack_tide_state). Both signals decay with the virtual clock like
+        any other load."""
+        island = self.registry.get(island_id)
+        if island.unbounded:
+            return
+        st = self._st(island_id)
+        st.mem = min(1.0, max(st.mem, float(occupancy)))
+        if blocked:
+            st.inflight = max(st.inflight,
+                              blocked / max(island.capacity_units, 1e-6))
+
     def effective_latency_ms(self, island) -> float:
         """Queueing-aware latency: base RTT+inference inflated by inflight
         work on bounded islands. This is what makes the paper's

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 
 from repro.kernels import decode_attention as _dec
 from repro.kernels import flash_attention as _fa
+from repro.kernels import paged_attention as _paged
 from repro.kernels import rglru as _rg
 from repro.kernels import ssd as _ssd
 
@@ -43,6 +44,16 @@ def decode_attention(q, k, v, valid_len, scale=None, block_k=512):
     """q (B,H,D) one token; k/v (B,S,Hkv,D)."""
     return _dec.decode_attention(q, k, v, valid_len, scale, block_k,
                                  interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("scale",))
+def paged_decode_attention(q, k_pages, v_pages, block_table, valid_lens,
+                           scale=None):
+    """q (B,H,D) one token; k_pages/v_pages (P,page_size,Hkv,D) shared
+    pool; block_table (B,N); valid_lens (B,)."""
+    return _paged.paged_decode_attention(q, k_pages, v_pages, block_table,
+                                         valid_lens, scale,
+                                         interpret=_interpret())
 
 
 @partial(jax.jit, static_argnames=("chunk",))

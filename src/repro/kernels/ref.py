@@ -42,6 +42,28 @@ def decode_attention(q, k, v, valid_len, scale):
     return o.reshape(B, H, D).astype(q.dtype)
 
 
+def paged_decode_attention(q, k_pages, v_pages, block_table, valid_lens,
+                           scale):
+    """q (B, H, D); k_pages/v_pages (P, page_size, Hkv, D); block_table
+    (B, N) int32; valid_lens (B,) int32. Gathers each sequence's K/V
+    through its block table, masks positions >= valid_lens[b]."""
+    B, H, D = q.shape
+    P, ps, Hkv, _ = k_pages.shape
+    N = block_table.shape[1]
+    G = H // Hkv
+    k = k_pages[block_table].reshape(B, N * ps, Hkv, D)
+    v = v_pages[block_table].reshape(B, N * ps, Hkv, D)
+    qg = q.reshape(B, Hkv, G, D)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    valid = jnp.asarray(valid_lens, jnp.int32)
+    s = jnp.where(jnp.arange(N * ps)[None, None, None, :]
+                  < valid[:, None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, D).astype(q.dtype)
+
+
 def ssd_chunk(x, dt, a, B_, C_):
     """Per-chunk SSD pieces (no inter-chunk recurrence).
 

@@ -65,6 +65,12 @@ def main(argv=None):
     ap.add_argument("--slots", type=int, default=4,
                     help="continuous-batching decode slots per SHORE island "
                          "(--batched only)")
+    ap.add_argument("--cache", default="auto",
+                    choices=("auto", "stacked", "paged"),
+                    help="KV-cache manager for --batched SHORE islands: "
+                         "dense stacked slot rows or the trust-tiered "
+                         "paged pool; auto = paged when the arch supports "
+                         "it (--batched only)")
     ap.add_argument("--train-classifier", action="store_true",
                     help="train the MIST stage-2 JAX classifier first")
     args = ap.parse_args(argv)
@@ -80,10 +86,11 @@ def main(argv=None):
     cfg = get_config(args.arch).reduced()
     wl = healthcare_workload(args.requests, seed=args.seed)
     if args.batched:
-        from repro.serving.batcher import ContinuousBatcher
+        from repro.serving.batcher import make_batcher
         from repro.serving.engine import TickOrchestrator
-        batchers = {iid: ContinuousBatcher(cfg, num_slots=args.slots,
-                                           max_len=128, seed=args.seed)
+        batchers = {iid: make_batcher(cfg, cache=args.cache,
+                                      num_slots=args.slots,
+                                      max_len=128, seed=args.seed)
                     for iid in ("laptop", "home-nas")}
         eng = TickOrchestrator(waves, reg, batchers, seed=args.seed)
     else:

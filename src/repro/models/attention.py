@@ -91,6 +91,22 @@ def attend_blocked(q, k, v, q_pos, k_pos, scale, window=None, prefix_len=0,
     return out.astype(q.dtype)
 
 
+def attend_decode_paged(q, k_pages, v_pages, block_table, valid_lens, scale):
+    """One-token decode against a paged pool: q (B,1,H,D); pages
+    (P,page_size,Hkv,D); block_table (B,N); valid_lens (B,)."""
+    from repro import kernels as _k
+    from repro.kernels import ref as _kref
+    B, _, H, D = q.shape
+    if _k.enabled():
+        from repro.kernels import ops as _kops
+        o = _kops.paged_decode_attention(q[:, 0], k_pages, v_pages,
+                                         block_table, valid_lens, scale)
+    else:
+        o = _kref.paged_decode_attention(q[:, 0], k_pages, v_pages,
+                                         block_table, valid_lens, scale)
+    return o[:, None]
+
+
 def attend_decode(q, k_cache, v_cache, valid_len, scale):
     """One-token decode: q (B,1,H,D); caches (B,S,Hkv,D); valid_len scalar
     (number of filled slots; ring buffers pass their fill count)."""
@@ -139,9 +155,15 @@ def attn_cache_spec(cfg, batch, max_len, window=None):
 
 
 def attn_apply(cfg, p, x, positions, *, mode, cache=None, window=None,
-               use_blocked=True, triangular=True):
+               use_blocked=True, triangular=True, block_table=None):
     """mode 'full' (train/prefill) or 'decode' (x is (B,1,d), positions is a
-    scalar absolute position). Returns (x + attn_out, new_cache_or_None)."""
+    scalar absolute position — or, for paged caches, a (B,) vector of
+    per-sequence positions). Returns (x + attn_out, new_cache_or_None).
+
+    A decode cache containing ``k_pages``/``v_pages`` (built by
+    ``serving.kvpool.PagePool``) selects the paged path: the new token's
+    K/V is scattered into its block-table page and attention gathers
+    through ``block_table`` (B, N)."""
     B = x.shape[0]
     H, Hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     scale = hd ** -0.5
@@ -183,6 +205,23 @@ def attn_apply(cfg, p, x, positions, *, mode, cache=None, window=None,
             else:  # windowed cache: keep the last W tokens
                 new_k, new_v = kd[:, -W:], vd[:, -W:]
             new_cache = {"k": new_k, "v": new_v}
+    elif "k_pages" in cache:  # decode against the paged pool
+        pos = positions          # scalar or (B,) absolute positions
+        posb = jnp.zeros((B,), jnp.int32) + pos
+        q = apply_rope(q, posb[:, None], cfg.rope_theta)
+        k = apply_rope(k, posb[:, None], cfg.rope_theta)
+        ps = cache["k_pages"].shape[1]
+        kd = k.astype(cache["k_pages"].dtype)
+        vd = v.astype(cache["v_pages"].dtype)
+        # scatter the new token into each sequence's current page; inactive
+        # slots carry all-zero block tables, landing on the scratch page
+        pi = block_table[jnp.arange(B), posb // ps]
+        off = posb % ps
+        new_kp = cache["k_pages"].at[pi, off].set(kd[:, 0])
+        new_vp = cache["v_pages"].at[pi, off].set(vd[:, 0])
+        o = attend_decode_paged(q, new_kp, new_vp, block_table, posb + 1,
+                                scale)
+        new_cache = {"k_pages": new_kp, "v_pages": new_vp}
     else:  # decode
         from repro.models.decode_sharded import (seq_sharded_decode,
                                                  use_seq_sharded)

@@ -195,12 +195,14 @@ class Model:
 
     # ------------------------------------------------------------ forward
     def _apply_layer(self, p, bt, x, positions, mode, cache, window,
-                     triangular=True):
+                     triangular=True, block_table=None):
         kw = {}
         if bt in ("attn", "mla"):
             kw["triangular"] = triangular
         if bt == "attn":
             kw["window"] = window or self.cfg.attn_window
+            if block_table is not None:
+                kw["block_table"] = block_table
         c_in = cache["mixer"] if cache is not None else None
         x, new_c = BLOCK_APPLY[bt](self.cfg, p["mixer"], x, positions,
                                    mode=mode, cache=c_in, **kw)
@@ -214,12 +216,14 @@ class Model:
 
     def forward(self, params, *, tokens=None, embeddings=None, mode="full",
                 cache=None, pos=None, window=None, remat=False,
-                triangular=True):
+                triangular=True, block_table=None):
         """Returns (logits, new_cache, aux_loss).
 
         mode='full': tokens (B,S) and/or embeddings (B,P,d); positions 0..S-1.
         mode='decode': tokens (B,1); ``pos`` scalar absolute position; cache
-        required (built by init_cache)."""
+        required (built by init_cache). Paged decode (cache leaves built by
+        ``serving.kvpool``) additionally takes ``block_table`` (B, N) and
+        allows ``pos`` to be a (B,) vector of per-sequence positions."""
         cfg = self.cfg
         emb = params["embed"]
         if embeddings is not None and tokens is not None:
@@ -244,7 +248,8 @@ class Model:
             c = cache.get(name) if cache is not None else None
             bt = _layer_block_type(cfg, idx)
             x, nc, aux = self._apply_layer(params[name], bt, x, positions,
-                                           mode, c, window, triangular)
+                                           mode, c, window, triangular,
+                                           block_table)
             if nc is not None:
                 new_cache[name] = nc
             return x, aux_total + aux
@@ -263,7 +268,7 @@ class Model:
                     c = cslice[f"slot{s}"] if cslice is not None else None
                     x, nc, a = self._apply_layer(
                         pslice[f"slot{s}"], bt, x, positions, mode, c, window,
-                        triangular)
+                        triangular, block_table)
                     if nc is not None:
                         ncs[f"slot{s}"] = nc
                     aux = aux + a

@@ -82,3 +82,17 @@ def make_serve_step(model, window=None):
         return logits[:, 0, :], new_cache
 
     return serve_step
+
+
+def make_paged_serve_step(model, window=None):
+    """One fused decode step for ALL sequences of a paged KV pool: token
+    (B,1), pos (B,) per-sequence absolute positions, block_table (B,N)
+    physical page ids. The cache pytree holds the pool's shared
+    ``k_pages``/``v_pages`` leaves (see serving.kvpool.PagePool)."""
+    def paged_serve_step(params, cache, token, pos, block_table):
+        logits, new_cache, _ = model.forward(
+            params, mode="decode", tokens=token, cache=cache, pos=pos,
+            window=window, block_table=block_table)
+        return logits[:, 0, :], new_cache
+
+    return paged_serve_step

@@ -1,23 +1,34 @@
-"""Continuous batching scheduler for a SHORE island.
+"""Continuous batching schedulers for a SHORE island.
 
-Fixed decode slots over one shared KV cache: requests prefill into a free
-slot (per-slot position tracking), every engine tick runs ONE batched decode
-step for all slots, finished sequences free their slot immediately for
-queued requests — the standard continuous-batching loop (vLLM-style,
-simplified to slot granularity) on top of this repo's models.
+Two cache managers behind one interface (``make_batcher(cfg, cache=...)``):
 
-Implementation notes:
-* the per-slot caches live STACKED in a single pytree with a leading
-  (num_slots,) axis; the decode step is ``jax.vmap``-ed over that axis (and
-  over per-slot token/position), so one XLA dispatch advances every slot —
-  per-slot ragged positions are handled by vmap without touching the model.
-* admission prefills one request at a time (exact prompt length, no pad
-  waste) and writes the fresh cache into its slot row with a donated
-  ``dynamic_update_index_in_dim``.
-* inactive slots decode a dummy token at position 0; their row is fully
-  overwritten at the next admission, so the garbage never escapes. This is
-  the usual padded-batch tradeoff: wasted FLOPs on idle slots in exchange
-  for a single fused dispatch.
+* ``ContinuousBatcher`` (``cache="stacked"``) — PR 1's fixed decode slots
+  over one shared *dense* KV cache: per-slot caches live STACKED in a
+  single pytree with a leading (num_slots,) axis, the decode step is
+  ``jax.vmap``-ed over that axis, and admission writes a whole O(max_len)
+  slot row per request. Simple, but memory is O(num_slots * max_len)
+  regardless of live tokens and nothing is ever shared.
+* ``PagedContinuousBatcher`` (``cache="paged"``) — the trust-tiered paged
+  KV pool (``serving.kvpool``): admission allocates page-granular blocks
+  (and attaches to cached same-tier prefix pages instead of allocating),
+  decode appends lazily page by page, completion frees pages back to the
+  pool. The decode step is ONE fused dispatch over all slots with
+  per-slot positions and block tables; attention gathers K/V through the
+  block table (``kernels.paged_attention`` on the Pallas path,
+  ``kernels.ref.paged_decode_attention`` otherwise).
+
+Shared semantics: requests prefill into a free slot, every engine tick
+runs ONE batched decode step for all slots, finished sequences free their
+slot (and, paged, their pages) immediately for queued requests. Inactive
+slots decode a dummy token at position 0 — against their (overwritten at
+admission) dense row in stacked mode, against the pool's reserved scratch
+page in paged mode — the usual padded-batch tradeoff of wasted FLOPs on
+idle slots for a single fused dispatch.
+
+Paged admission prefills the FULL prompt (shared prefix pages currently
+save pool *memory* and page-write dispatches, not prefill FLOPs — a
+prefix-aware chunked prefill is the natural follow-up) and scatters only
+the non-shared chunks into fresh pages.
 """
 from __future__ import annotations
 
@@ -29,8 +40,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.data.tokenizer import ByteTokenizer
-from repro.models.model import get_model
-from repro.models.steps import make_prefill_step, make_serve_step
+from repro.models.model import effective_pattern, get_model
+from repro.models.steps import (make_paged_serve_step, make_prefill_step,
+                                make_serve_step)
+from repro.serving.kvpool import PagePool, prefix_chunk_hashes
 from repro.serving.sampling import sample
 
 
@@ -42,17 +55,15 @@ class SlotState:
     prompt_len: int = 0
     generated: list = field(default_factory=list)
     max_new: int = 16
+    pages: list = field(default_factory=list)   # paged mode: block list
+    tier: Optional[int] = None                  # paged mode: trust tier
+    shared_pages: int = 0                       # paged mode: prefix hits
+    prompt: str = ""                            # paged mode: for preemption
 
 
-def _write_slot(stacked, one, si):
-    """Write a (1, ...)-shaped cache pytree into row ``si`` of the stacked
-    (num_slots, 1, ...) cache."""
-    return jax.tree.map(
-        lambda s, o: jax.lax.dynamic_update_index_in_dim(
-            s, o.astype(s.dtype), si, 0), stacked, one)
+class _BatcherBase:
+    """Queue/slot lifecycle shared by both cache managers."""
 
-
-class ContinuousBatcher:
     def __init__(self, cfg, params=None, num_slots=4, max_len=256,
                  seed=0, dtype="float32", temperature=0.0):
         self.cfg = cfg
@@ -64,37 +75,83 @@ class ContinuousBatcher:
         self.temperature = temperature
         self.tok = ByteTokenizer(cfg.vocab_size)
         self.key = jax.random.PRNGKey(seed + 1)
-        # stacked slot caches: leading axis = slot
-        one = self.model.init_cache(1, max_len, dtype=jnp.bfloat16)
-        self._cache = jax.tree.map(
-            lambda x: jnp.zeros((num_slots,) + x.shape, x.dtype), one)
         self.slots = [SlotState() for _ in range(num_slots)]
         self.queue: list = []
-        self.finished: dict[int, str] = {}
+        # rid -> generated text; None marks an executor-level rejection
+        # (request could never fit the page pool)
+        self.finished: dict[int, Optional[str]] = {}
         self._next_id = 0
         self._prefill = jax.jit(make_prefill_step(self.model))
-        self._decode_all = jax.jit(
-            jax.vmap(make_serve_step(self.model), in_axes=(None, 0, 0, 0)),
-            donate_argnums=(1,))
-        self._write = jax.jit(_write_slot, donate_argnums=(0,))
         self.stats = {"ticks": 0, "prefills": 0, "decode_tokens": 0,
                       "decode_steps": 0, "queued_peak": 0}
 
     # --------------------------------------------------------- submission
-    def submit(self, prompt: str, max_new_tokens=16) -> int:
+    def submit(self, prompt: str, max_new_tokens=16,
+               trust_tier: Optional[int] = None) -> int:
+        """Enqueue a request. ``trust_tier`` tags the KV pages it produces
+        (paged mode); None = untiered, which shares nothing (fail closed).
+        The stacked cache manager ignores the tier."""
         rid = self._next_id
         self._next_id += 1
-        self.queue.append((rid, prompt, max_new_tokens))
+        self.queue.append((rid, prompt, max_new_tokens, trust_tier))
         self.stats["queued_peak"] = max(self.stats["queued_peak"],
                                         len(self.queue))
         return rid
+
+    def busy(self) -> bool:
+        return bool(self.queue) or any(s.active for s in self.slots)
+
+    def run_until_done(self, max_ticks=10_000):
+        while self.busy() and self.stats["ticks"] < max_ticks:
+            self.tick()
+        return self.finished
+
+    def utilization(self) -> float:
+        return sum(s.active for s in self.slots) / self.num_slots
+
+    def _encode(self, prompt, max_new):
+        return self.tok.encode(prompt)[: self.max_len - max_new - 1]
+
+    def _sample_next(self, logits):
+        self.key, k = jax.random.split(self.key)
+        return np.asarray(sample(logits, k, self.temperature))
+
+    def _finish_slot(self, si):
+        s = self.slots[si]
+        self.finished[s.request_id] = self.tok.decode(s.generated)
+        self.slots[si] = SlotState()
+
+
+def _write_slot(stacked, one, si):
+    """Write a (1, ...)-shaped cache pytree into row ``si`` of the stacked
+    (num_slots, 1, ...) cache."""
+    return jax.tree.map(
+        lambda s, o: jax.lax.dynamic_update_index_in_dim(
+            s, o.astype(s.dtype), si, 0), stacked, one)
+
+
+class ContinuousBatcher(_BatcherBase):
+    """Dense stacked-slot cache manager (PR 1 semantics, unchanged)."""
+
+    def __init__(self, cfg, params=None, num_slots=4, max_len=256,
+                 seed=0, dtype="float32", temperature=0.0):
+        super().__init__(cfg, params, num_slots, max_len, seed, dtype,
+                         temperature)
+        # stacked slot caches: leading axis = slot
+        one = self.model.init_cache(1, max_len, dtype=jnp.bfloat16)
+        self._cache = jax.tree.map(
+            lambda x: jnp.zeros((num_slots,) + x.shape, x.dtype), one)
+        self._decode_all = jax.jit(
+            jax.vmap(make_serve_step(self.model), in_axes=(None, 0, 0, 0)),
+            donate_argnums=(1,))
+        self._write = jax.jit(_write_slot, donate_argnums=(0,))
 
     def _admit(self):
         for si, s in enumerate(self.slots):
             if s.active or not self.queue:
                 continue
-            rid, prompt, max_new = self.queue.pop(0)
-            ids = self.tok.encode(prompt)[: self.max_len - max_new - 1]
+            rid, prompt, max_new, _tier = self.queue.pop(0)
+            ids = self._encode(prompt, max_new)
             toks = jnp.asarray(np.asarray(ids, np.int32)[None])
             cache = self.model.init_cache(1, self.max_len,
                                           dtype=jnp.bfloat16)
@@ -123,8 +180,7 @@ class ContinuousBatcher:
             poss[si] = s.pos
         logits, self._cache = self._decode_all(
             self.params, self._cache, jnp.asarray(toks), jnp.asarray(poss))
-        self.key, k = jax.random.split(self.key)
-        nxt = np.asarray(sample(logits[:, 0, :], k, self.temperature))
+        nxt = self._sample_next(logits[:, 0, :])
         self.stats["decode_steps"] += 1
         for si in active:
             s = self.slots[si]
@@ -134,16 +190,226 @@ class ContinuousBatcher:
             done = (len(s.generated) >= s.max_new
                     or s.pos >= self.max_len - 1)
             if done:
-                self.finished[s.request_id] = self.tok.decode(s.generated)
-                self.slots[si] = SlotState()
+                self._finish_slot(si)
 
-    def busy(self) -> bool:
-        return bool(self.queue) or any(s.active for s in self.slots)
 
-    def run_until_done(self, max_ticks=10_000):
-        while self.busy() and self.stats["ticks"] < max_ticks:
-            self.tick()
-        return self.finished
+class PagedContinuousBatcher(_BatcherBase):
+    """Paged-pool cache manager: page-granular allocation, trust-tiered
+    prefix sharing, copy-on-write appends, page free at completion."""
 
-    def utilization(self) -> float:
-        return sum(s.active for s in self.slots) / self.num_slots
+    def __init__(self, cfg, params=None, num_slots=4, max_len=256,
+                 seed=0, dtype="float32", temperature=0.0, page_size=16,
+                 num_pages=None, sharing=True):
+        if not paged_supported(cfg):
+            raise ValueError(
+                f"paged KV cache requires a full-history attention-only "
+                f"pattern, got {sorted(set(effective_pattern(cfg)))}"
+                f"{' with attn_window' if cfg.attn_window else ''} — use "
+                f"cache='stacked' for this config")
+        super().__init__(cfg, params, num_slots, max_len, seed, dtype,
+                         temperature)
+        self.page_size = page_size
+        self.pages_per_seq = -(-max_len // page_size)
+        if num_pages is None:
+            # worst case: every slot holds a full private sequence
+            num_pages = num_slots * self.pages_per_seq + 1
+        self.pool = PagePool(self.model, max_len, page_size, num_pages,
+                             dtype=jnp.bfloat16, sharing=sharing)
+        self.block_tables = np.zeros((num_slots, self.pages_per_seq),
+                                     np.int32)
+        self._decode_all = jax.jit(make_paged_serve_step(self.model),
+                                   donate_argnums=(1,))
+        self.blocked_last_tick = 0
+        self.stats.update({"share_hits": 0, "cow_copies": 0, "stalls": 0,
+                           "preemptions": 0, "rejected_too_large": 0})
+
+    # ---------------------------------------------------------- admission
+    def _admit(self):
+        for si, s in enumerate(self.slots):
+            if s.active:
+                continue
+            if not self.queue:
+                break
+            rid, prompt, max_new, tier = self.queue[0]
+            ids = self._encode(prompt, max_new)
+            chunks = prefix_chunk_hashes(ids, self.page_size)
+            hits0 = self.pool.stats["share_hits"]
+            miss0 = self.pool.stats["share_misses"]
+            shared = []
+            for chash, fill in chunks:
+                pid = self.pool.lookup_prefix(tier, chash, fill)
+                if pid is None:
+                    break
+                shared.append(pid)
+            n_fresh = len(chunks) - len(shared)
+            # a sequence must be able to run ALONE (prompt + every decode
+            # token) or preemption can never rescue it: admitting would
+            # self-preempt forever. Reject just this request (None result,
+            # distinguishable from a real empty generation) instead of
+            # blocking the queue or crashing the serving loop.
+            worst = -(-(len(ids) + max_new) // self.page_size)
+            if worst > self.pool.num_pages - 1:
+                self.queue.pop(0)
+                self.finished[rid] = None
+                self.stats["rejected_too_large"] += 1
+                continue
+            if self.pool.free_count() < n_fresh:
+                # pool exhausted — leave the request queued; the engine
+                # reads this as eviction pressure and routes around us.
+                # Nothing attached, so the probe must not count toward the
+                # share-hit telemetry (retries would inflate it every tick)
+                self.pool.stats["share_hits"] = hits0
+                self.pool.stats["share_misses"] = miss0
+                self.pool.stats["blocked"] += 1
+                self.blocked_last_tick += 1
+                break
+            self.queue.pop(0)
+            for pid in shared:
+                self.pool.incref(pid)
+            pages = list(shared)
+            for _ in range(n_fresh):
+                pages.append(self.pool.alloc(tier))
+            # full-prompt prefill (exact length); shared pages already hold
+            # identical K/V — only fresh chunks are scattered into the pool
+            toks = jnp.asarray(np.asarray(ids, np.int32)[None])
+            cache = self.model.init_cache(1, self.max_len,
+                                          dtype=jnp.bfloat16)
+            logits, dense = self._prefill(self.params, cache,
+                                          {"tokens": toks})
+            # one fused scatter for the whole admission: shared chunks are
+            # masked to the scratch page (their pool pages already hold
+            # identical K/V and must not be touched)
+            dst = [0] * len(shared) + pages[len(shared):]
+            self.pool.write_prompt_pages(dense, dst)
+            for j in range(len(shared), len(chunks)):
+                chash, fill = chunks[j]
+                self.pool.register_prefix(pages[j], tier, chash, fill)
+            row = np.zeros(self.pages_per_seq, np.int32)
+            row[:len(pages)] = pages
+            self.block_tables[si] = row
+            tok0 = int(jnp.argmax(logits[0]))
+            self.slots[si] = SlotState(active=True, request_id=rid,
+                                       pos=len(ids), prompt_len=len(ids),
+                                       generated=[tok0], max_new=max_new,
+                                       pages=pages, tier=tier,
+                                       shared_pages=len(shared),
+                                       prompt=prompt)
+            self.stats["prefills"] += 1
+            self.stats["share_hits"] += len(shared)
+
+    def _prepare_write_page(self, si) -> bool:
+        """Make slot ``si``'s next write position backed by a private page:
+        allocate on a page-boundary crossing, copy-on-write when the target
+        page is shared. False = stalled (pool exhausted)."""
+        s = self.slots[si]
+        wp = s.pos // self.page_size
+        if wp >= len(s.pages):
+            pid = self.pool.alloc(s.tier)
+            if pid is None:
+                return False
+            s.pages.append(pid)
+            self.block_tables[si, wp] = pid
+        pid = s.pages[wp]
+        if self.pool.refcount[pid] > 1:
+            new = self.pool.cow(pid, s.tier)
+            if new is None:
+                return False
+            s.pages[wp] = new
+            self.block_tables[si, wp] = new
+            self.stats["cow_copies"] += 1
+        return True
+
+    # --------------------------------------------------------------- tick
+    def tick(self):
+        """Admit from queue (attaching to cached same-tier prefixes), then
+        ONE fused paged decode step for all slots."""
+        self.blocked_last_tick = 0
+        self._admit()
+        self.stats["ticks"] += 1
+        active = [si for si, s in enumerate(self.slots) if s.active]
+        if not active:
+            return
+        ready, stalled = [], []
+        for si in active:
+            if self._prepare_write_page(si):
+                ready.append(si)
+            else:
+                stalled.append(si)
+                self.stats["stalls"] += 1
+                self.blocked_last_tick += 1
+        while not ready and stalled:
+            # EVERY active slot is blocked on page exhaustion: without
+            # intervention no slot can decode, finish, or free — a
+            # permanent deadlock on oversubscribed pools. Preempt the
+            # youngest stalled sequence (fewest tokens to recompute):
+            # release its pages, requeue it, and hand the freed pages to
+            # the survivors IN THIS TICK (re-admitting first would just
+            # re-create the same stall next tick).
+            victim = min(stalled, key=lambda si: len(self.slots[si].generated))
+            stalled.remove(victim)
+            s = self.slots[victim]
+            for pid in s.pages:
+                self.pool.decref(pid)
+            self.block_tables[victim] = 0
+            self.queue.insert(0, (s.request_id, s.prompt, s.max_new, s.tier))
+            self.slots[victim] = SlotState()
+            self.stats["preemptions"] += 1
+            for si in list(stalled):
+                if self._prepare_write_page(si):
+                    ready.append(si)
+                    stalled.remove(si)
+        if not ready:
+            return
+        toks = np.zeros((self.num_slots, 1), np.int32)
+        poss = np.zeros((self.num_slots,), np.int32)
+        bt = np.zeros_like(self.block_tables)
+        for si in ready:
+            s = self.slots[si]
+            toks[si, 0] = s.generated[-1]
+            poss[si] = s.pos
+            bt[si] = self.block_tables[si]
+        # stalled/inactive rows keep all-zero tables: their dummy token
+        # lands on the reserved scratch page and never escapes.
+        # Trim the dispatch to the pages any sequence actually occupies —
+        # decode cost tracks LIVE tokens, not table capacity (one compile
+        # per width, bounded by pages_per_seq)
+        n_live = max(self.slots[si].pos // self.page_size + 1
+                     for si in ready)
+        logits, self.pool.pages = self._decode_all(
+            self.params, self.pool.pages, jnp.asarray(toks),
+            jnp.asarray(poss), jnp.asarray(bt[:, :n_live]))
+        nxt = self._sample_next(logits)
+        self.stats["decode_steps"] += 1
+        for si in ready:
+            s = self.slots[si]
+            s.generated.append(int(nxt[si]))
+            s.pos += 1
+            self.stats["decode_tokens"] += 1
+            done = (len(s.generated) >= s.max_new
+                    or s.pos >= self.max_len - 1)
+            if done:
+                for pid in s.pages:
+                    self.pool.decref(pid)
+                self.block_tables[si] = 0
+                self._finish_slot(si)
+
+
+def paged_supported(cfg) -> bool:
+    """Paged decode handles full-history attention-only patterns; windowed
+    attention (ring-buffer slots) and ssm/rglru/mla state stay stacked."""
+    return set(effective_pattern(cfg)) == {"attn"} and not cfg.attn_window
+
+
+def make_batcher(cfg, cache: str = "auto", **kw):
+    """Factory: ``cache`` in {"auto", "paged", "stacked"} — auto picks the
+    paged pool whenever the architecture supports it."""
+    if cache == "auto":
+        cache = "paged" if paged_supported(cfg) else "stacked"
+    if cache == "paged":
+        return PagedContinuousBatcher(cfg, **kw)
+    if cache == "stacked":
+        kw.pop("page_size", None)
+        kw.pop("num_pages", None)
+        kw.pop("sharing", None)
+        return ContinuousBatcher(cfg, **kw)
+    raise ValueError(f"unknown cache manager {cache!r}")

@@ -41,6 +41,7 @@ from repro.core.waves import Decision, Request
 from repro.data.tokenizer import ByteTokenizer
 from repro.models.model import get_model
 from repro.models.steps import make_prefill_step, make_serve_step
+from repro.serving.kvpool import trust_tier_for_sensitivity
 
 
 @dataclass
@@ -393,7 +394,11 @@ class TickOrchestrator:
                          else p.req.query)
                 b = self.batchers.get(island.island_id)
                 if b is not None:
-                    brid = b.submit(query, p.max_new_tokens)
+                    # KV pages this request produces carry its MIST trust
+                    # tier; prefix sharing is only legal within a tier
+                    brid = b.submit(query, p.max_new_tokens,
+                                    trust_tier=trust_tier_for_sensitivity(
+                                        d.sensitivity))
                     self._local_inflight[(island.island_id, brid)] = (p, d)
                 else:
                     text, exec_ms = self.cloud.complete(island, query)
@@ -402,10 +407,12 @@ class TickOrchestrator:
                     self._sim_inflight.append((ready, p, d, text, exec_ms))
         # SHORE: continuous-batching decode steps
         for iid, b in self.batchers.items():
+            blocked = 0            # accumulated: b.tick() resets its count
             for _ in range(self.decode_ticks_per_tick):
                 if not b.busy():
                     break
                 b.tick()
+                blocked += getattr(b, "blocked_last_tick", 0)
                 self.tick_stats["decode_ticks"] += 1
                 self._util_sum[iid] = self._util_sum.get(iid, 0.0) \
                     + b.utilization()
@@ -415,7 +422,22 @@ class TickOrchestrator:
                 if key not in self._local_inflight:
                     continue           # submitted outside the orchestrator
                 p, d = self._local_inflight.pop(key)
-                completed.append(self._complete(p, d, b.finished.pop(brid)))
+                text = b.finished.pop(brid)
+                if text is None:       # executor-level rejection (e.g. the
+                    self.rejected.append(d)    # request can't fit the pool)
+                    self.results[p.rid] = None
+                    continue
+                completed.append(self._complete(p, d, text))
+            # KV-pool pressure feedback + telemetry (paged batchers only)
+            kv_pool = getattr(b, "pool", None)
+            if kv_pool is not None:
+                if waves.tide.crashed:
+                    # fail closed: no prefix sharing on a crashed-TIDE
+                    # island (capacity/trust signals can't be validated)
+                    kv_pool.disable_sharing()
+                waves.tide.report_pool_pressure(
+                    iid, kv_pool.occupancy(), blocked=blocked)
+                waves.lighthouse.report_pool(iid, kv_pool.telemetry())
         # advance virtual time
         waves.tide.advance(self.tick_interval_s)
         waves.lighthouse.advance(self.tick_interval_s)
@@ -474,4 +496,46 @@ class TickOrchestrator:
         s["utilization"] = {iid: self._util_sum.get(iid, 0.0)
                             / max(self._util_n.get(iid, 0), 1)
                             for iid in self.batchers}
+        pools = self.waves.lighthouse.pool_telemetry()
+        if pools:
+            s["kv_pools"] = pools
         return s
+
+
+def build_island_batchers(cfg, registry, cache="auto", params=None,
+                          slots_per_capacity_unit=2.0, max_len=96,
+                          page_size=16, pool_headroom=1.0, seed=0,
+                          temperature=0.0):
+    """Per-SHORE-island continuous batchers with KV pools sized from each
+    island's declared ``capacity_units``.
+
+    Slot count scales linearly with capacity; in paged mode the page pool
+    is sized to ``slots * pages_per_seq * pool_headroom`` — headroom 1.0
+    can hold every slot fully private (never stalls), < 1.0 deliberately
+    oversubscribes so the pool only fits the workload when prefix sharing
+    pays, surfacing eviction pressure to the router. Model parameters are
+    initialized once and shared across islands (same weights everywhere,
+    as with the per-request engine's LocalModelServer).
+    """
+    from repro.serving.batcher import make_batcher, paged_supported
+    if cache == "auto":                 # resolve once so sizing matches
+        cache = "paged" if paged_supported(cfg) else "stacked"
+    pages_per_seq = -(-max_len // page_size)
+    out = {}
+    for isl in registry.all():
+        if isl.endpoint != "shore":
+            continue
+        slots = max(1, int(round(slots_per_capacity_unit
+                                 * isl.capacity_units)))
+        # page kwargs are computed unconditionally; make_batcher drops
+        # them for the stacked manager
+        b = make_batcher(
+            cfg, cache=cache, params=params, num_slots=slots,
+            max_len=max_len, seed=seed, temperature=temperature,
+            page_size=page_size,
+            num_pages=max(2, int(slots * pages_per_seq
+                                 * pool_headroom)) + 1)
+        if params is None:
+            params = b.params        # share weights across islands
+        out[isl.island_id] = b
+    return out

@@ -1,0 +1,337 @@
+"""Trust-tiered paged KV-cache pool (vLLM-style, privacy-aware).
+
+The dense stacked slot cache (PR 1's ``ContinuousBatcher``) reserves
+O(max_len) KV rows per slot for the slot's whole lifetime and can never
+share state between requests. This module replaces that with a fixed-page
+block pool:
+
+* physical storage is ``num_pages`` pages of ``page_size`` tokens each, one
+  (num_pages, page_size, Hkv, D) array per attention-layer cache leaf
+  (page id indexes EVERY layer's array, so one block table serves the whole
+  model — the standard vLLM layout);
+* a free list + per-page refcounts give allocate/free at page granularity:
+  sequences allocate pages lazily as they decode and release them at
+  completion, so pool memory tracks *live tokens*, not slot capacity;
+* pages are **copy-on-write**: a page with refcount > 1 is frozen; a writer
+  must ``cow()`` it (copy to a fresh page) before appending, which is what
+  makes prefix sharing safe;
+* prefix sharing is **trust-tiered**: every page carries the MIST trust
+  tier of the request that produced it, and the prefix index is keyed by
+  ``(tier, chain_hash, fill)`` — a request can only attach to a cached
+  prefix page produced at *exactly its own tier*.  Requests without a tier
+  and pools whose island's TIDE has crashed share nothing (fail closed).
+
+Page 0 is reserved as a scratch page: inactive decode slots point their
+block tables at it so the fused decode step can write their dummy tokens
+somewhere harmless.
+
+The pool is deliberately split into host-side accounting (pure Python —
+this is what the property tests drive) and device-side page storage (built
+from ``model.cache_spec`` and mutated by three jitted ops: prompt-chunk
+scatter, page copy, and the decode step itself via
+``kernels.paged_attention``).
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+SCRATCH_PAGE = 0
+
+
+# --------------------------------------------------------------- trust tiers
+
+def trust_tier_for_sensitivity(s_r: float) -> int:
+    """Map a MIST sensitivity score to the three-tier trust hierarchy used
+    to tag KV pages (mirrors the island tiers: 1 personal, 2 private edge,
+    3 cloud). High-sensitivity state may only ever be shared with requests
+    in the same high tier."""
+    if s_r >= 0.8:
+        return 1
+    if s_r >= 0.5:
+        return 2
+    return 3
+
+
+def prefix_chunk_hashes(token_ids, page_size: int):
+    """Chain hashes over page-sized chunks of a prompt.
+
+    Returns ``[(hash, fill), ...]`` — one entry per chunk, where ``hash``
+    commits to every token from position 0 through the chunk's end and
+    ``fill`` is the number of tokens in the chunk (== page_size except
+    possibly for the last).  Chaining means equal hash => equal *entire
+    prefix*, which is the invariant that makes page sharing sound.
+    """
+    out = []
+    h = hashlib.sha256(b"kvpool-prefix")
+    for start in range(0, len(token_ids), page_size):
+        chunk = token_ids[start:start + page_size]
+        h.update(np.asarray(chunk, np.int32).tobytes())
+        h.update(len(chunk).to_bytes(4, "little"))
+        out.append((h.hexdigest(), len(chunk)))
+    return out
+
+
+# -------------------------------------------------------------- device ops
+
+def _leaf_page_axis(leaf) -> int:
+    """Pool leaves are (P, ps, Hkv, D) or, for scanned layer groups,
+    (G, P, ps, Hkv, D)."""
+    return 0 if leaf.ndim == 4 else 1
+
+
+def _write_pages(pages, dense, page_ids, *, ps):
+    """Scatter EVERY page-sized chunk of a (1, max_len, ...) dense prefill
+    cache into the pool in one dispatch: chunk j lands on ``page_ids[j]``.
+    Chunks the caller wants skipped (already-shared pages, positions past
+    the prompt) map to the scratch page 0, whose content is never read —
+    this keeps the call a single fixed-shape scatter per admission instead
+    of one dispatch per page.
+
+    The two pytrees are isomorphic but the pool renames leaves (k ->
+    k_pages), so leaves are zipped positionally rather than tree-mapped.
+    """
+    def one(p, d):
+        if p.ndim == 4:                      # (P, ps, Hkv, D) <- (1, S, ...)
+            chunks = d[0].reshape(-1, ps, *d.shape[2:]).astype(p.dtype)
+            return p.at[page_ids].set(chunks)
+        # (G, P, ps, Hkv, D) <- (G, 1, S, ...)
+        chunks = d[:, 0].reshape(d.shape[0], -1, ps,
+                                 *d.shape[3:]).astype(p.dtype)
+        return p.at[:, page_ids].set(chunks)
+    p_leaves, p_def = jax.tree.flatten(pages)
+    d_leaves = jax.tree.leaves(dense)
+    assert len(p_leaves) == len(d_leaves)
+    return jax.tree.unflatten(p_def, [one(p, d) for p, d
+                                      in zip(p_leaves, d_leaves)])
+
+
+def _copy_page(pages, src, dst):
+    """dst page := src page, every leaf (the COW copy)."""
+    def one(p):
+        if p.ndim == 4:
+            row = jax.lax.dynamic_index_in_dim(p, src, 0, keepdims=False)
+            return jax.lax.dynamic_update_index_in_dim(p, row, dst, 0)
+        row = jax.lax.dynamic_index_in_dim(p, src, 1, keepdims=False)
+        return jax.lax.dynamic_update_index_in_dim(p, row, dst, 1)
+    return jax.tree.map(one, pages)
+
+
+# ---------------------------------------------------------------- the pool
+
+@dataclass
+class _PageMeta:
+    tier: Optional[int] = None
+    key: Optional[tuple] = None     # (tier, hash, fill) while indexed
+
+
+class PagePool:
+    """Refcounted, trust-tier-tagged fixed-page KV pool.
+
+    ``model=None`` builds an accounting-only pool (no device arrays) —
+    that's what the allocation/free/sharing property tests exercise; the
+    serving path passes the real model so ``pages`` holds per-layer
+    (num_pages, page_size, Hkv, D) storage.
+    """
+
+    def __init__(self, model=None, max_len: int = 256, page_size: int = 16,
+                 num_pages: int = 64, dtype=jnp.bfloat16, sharing: bool = True):
+        assert num_pages >= 2, "need at least scratch + 1 usable page"
+        if max_len % page_size:
+            # the prompt-chunk scatter slices the (1, max_len) dense prefill
+            # cache in whole pages; a ragged tail slice would CLAMP its start
+            # (lax.dynamic_slice semantics) and silently write shifted K/V
+            raise ValueError(
+                f"max_len ({max_len}) must be a multiple of page_size "
+                f"({page_size})")
+        self.page_size = page_size
+        self.num_pages = num_pages
+        self.max_len = max_len
+        self.sharing_enabled = sharing
+        self.refcount = np.zeros(num_pages, np.int32)
+        self.refcount[SCRATCH_PAGE] = 1          # never allocated, never freed
+        self._free = list(range(num_pages - 1, 0, -1))   # pop() -> low ids first
+        self._meta = {pid: _PageMeta() for pid in range(num_pages)}
+        self._prefix_index: dict[tuple, int] = {}
+        self.stats = {"allocs": 0, "frees": 0, "share_hits": 0,
+                      "share_misses": 0, "cow_copies": 0, "blocked": 0,
+                      "peak_in_use": 0}
+        self.pages = None
+        self._write_pages_fn = None
+        self._copy_page_fn = None
+        if model is not None:
+            spec = model.cache_spec(1, max_len)
+            self.pages = self._build_pages(spec, dtype)
+            self._write_pages_fn = jax.jit(
+                partial(_write_pages, ps=page_size), donate_argnums=(0,))
+            self._copy_page_fn = jax.jit(_copy_page, donate_argnums=(0,))
+
+    def _build_pages(self, spec, dtype):
+        def _is_sa(v):
+            return (isinstance(v, tuple) and len(v) == 2
+                    and isinstance(v[0], tuple))
+
+        def mk(name, sa):
+            shape, _ = sa
+            if name not in ("k", "v"):
+                raise ValueError(
+                    f"paged KV pool only supports attention caches, got "
+                    f"cache leaf {name!r} (use the stacked batcher for "
+                    f"ssm/rglru/mla patterns)")
+            if len(shape) == 4:              # (1, S, Hkv, D)
+                _, _, hkv, d = shape
+                out = (self.num_pages, self.page_size, hkv, d)
+            else:                            # (G, 1, S, Hkv, D)
+                g, _, _, hkv, d = shape
+                out = (g, self.num_pages, self.page_size, hkv, d)
+            return jnp.zeros(out, dtype)
+
+        def walk(node):
+            out = {}
+            for k, v in node.items():
+                if _is_sa(v):
+                    out[k + "_pages"] = mk(k, v)
+                else:
+                    out[k] = walk(v)
+            return out
+
+        return walk(spec)
+
+    # ------------------------------------------------------------ accounting
+    def in_use(self) -> int:
+        """Allocated pages (excluding the reserved scratch page)."""
+        return self.num_pages - 1 - len(self._free)
+
+    def free_count(self) -> int:
+        return len(self._free)
+
+    def occupancy(self) -> float:
+        return self.in_use() / max(self.num_pages - 1, 1)
+
+    def alloc(self, tier: Optional[int] = None) -> Optional[int]:
+        """Take a free page (tagged with the requester's trust tier).
+        Returns None when the pool is exhausted — callers treat that as
+        admission backpressure, not an error."""
+        if not self._free:
+            self.stats["blocked"] += 1
+            return None
+        pid = self._free.pop()
+        assert self.refcount[pid] == 0
+        self.refcount[pid] = 1
+        self._meta[pid] = _PageMeta(tier=tier)
+        self.stats["allocs"] += 1
+        self.stats["peak_in_use"] = max(self.stats["peak_in_use"],
+                                        self.in_use())
+        return pid
+
+    def incref(self, pid: int):
+        assert pid != SCRATCH_PAGE and self.refcount[pid] > 0
+        self.refcount[pid] += 1
+
+    def decref(self, pid: int):
+        assert pid != SCRATCH_PAGE, "scratch page is never freed"
+        assert self.refcount[pid] > 0, f"double free of page {pid}"
+        self.refcount[pid] -= 1
+        if self.refcount[pid] == 0:
+            meta = self._meta[pid]
+            if meta.key is not None:
+                self._prefix_index.pop(meta.key, None)
+            self._meta[pid] = _PageMeta()
+            self._free.append(pid)
+            self.stats["frees"] += 1
+
+    # ---------------------------------------------------------- prefix index
+    def lookup_prefix(self, tier: Optional[int], chash: str,
+                      fill: int) -> Optional[int]:
+        """Find a live page holding this exact prefix chunk at this exact
+        trust tier. Tier None (unknown sensitivity) and disabled sharing
+        both fail closed: nothing is ever returned."""
+        if not self.sharing_enabled or tier is None:
+            return None
+        pid = self._prefix_index.get((tier, chash, fill))
+        if pid is None:
+            self.stats["share_misses"] += 1
+            return None
+        assert self._meta[pid].tier == tier      # impossible by construction
+        self.stats["share_hits"] += 1
+        return pid
+
+    def register_prefix(self, pid: int, tier: Optional[int], chash: str,
+                        fill: int):
+        if not self.sharing_enabled or tier is None:
+            return
+        key = (tier, chash, fill)
+        if key in self._prefix_index:
+            return                               # first writer wins
+        self._prefix_index[key] = pid
+        self._meta[pid].key = key
+
+    def disable_sharing(self):
+        """Fail closed (crashed TIDE, unattested island): stop both lookups
+        and registrations. Existing shared pages stay refcounted/safe."""
+        self.sharing_enabled = False
+
+    # ------------------------------------------------------------------ COW
+    def cow(self, pid: int, tier: Optional[int] = None) -> Optional[int]:
+        """Copy-on-write: take a private copy of ``pid`` for a writer.
+        Decrefs the original, returns the new page id (None if the pool is
+        exhausted; the caller must then stall the writer)."""
+        new = self.alloc(tier if tier is not None else self._meta[pid].tier)
+        if new is None:
+            return None
+        if self.pages is not None:
+            self.pages = self._copy_page_fn(self.pages, jnp.int32(pid),
+                                            jnp.int32(new))
+        self.decref(pid)
+        self.stats["cow_copies"] += 1
+        return new
+
+    # ----------------------------------------------------------- device I/O
+    def write_prompt_pages(self, dense_cache, page_ids):
+        """Scatter a whole admission's prompt chunks from the (1, max_len)
+        dense prefill cache into the pool in ONE jitted dispatch (donated
+        pool buffers). ``page_ids`` must cover every max_len/page_size
+        chunk; entries set to the scratch page (0) are skip markers for
+        already-shared pages and positions past the prompt."""
+        ids = np.zeros(self.max_len // self.page_size, np.int32)
+        ids[:len(page_ids)] = page_ids
+        self.pages = self._write_pages_fn(self.pages, dense_cache,
+                                          jnp.asarray(ids))
+
+    # ------------------------------------------------------------ telemetry
+    def telemetry(self) -> dict:
+        return {
+            "num_pages": self.num_pages - 1,
+            "in_use": self.in_use(),
+            "occupancy": round(self.occupancy(), 4),
+            "peak_in_use": self.stats["peak_in_use"],
+            "share_hits": self.stats["share_hits"],
+            "share_misses": self.stats["share_misses"],
+            "share_hit_rate": round(
+                self.stats["share_hits"]
+                / max(self.stats["share_hits"] + self.stats["share_misses"],
+                      1), 4),
+            "cow_copies": self.stats["cow_copies"],
+            "blocked": self.stats["blocked"],
+            "sharing_enabled": self.sharing_enabled,
+        }
+
+    # ------------------------------------------------------------ invariants
+    def check(self):
+        """Structural invariants (used by the property tests)."""
+        assert len(set(self._free)) == len(self._free), "free list dup"
+        for pid in self._free:
+            assert self.refcount[pid] == 0
+        live = self.in_use()
+        assert live == sum(1 for p in range(1, self.num_pages)
+                           if self.refcount[p] > 0)
+        for key, pid in self._prefix_index.items():
+            assert self.refcount[pid] > 0, "index points at freed page"
+            assert self._meta[pid].tier == key[0], "cross-tier index entry"
+        return True

@@ -1,0 +1,275 @@
+"""Trust-tiered paged KV pool: allocation/free safety (property tests),
+copy-on-write logits parity with the dense cache, tier-isolated prefix
+sharing, and the pool-pressure -> routing feedback loop."""
+import pytest
+
+from _hypothesis_shim import given, settings, st
+
+from repro.serving.kvpool import (PagePool, prefix_chunk_hashes,
+                                  trust_tier_for_sensitivity)
+
+
+# ------------------------------------------------------------- accounting
+
+def test_alloc_free_roundtrip():
+    p = PagePool(num_pages=8)
+    pids = [p.alloc(tier=1) for _ in range(7)]
+    assert None not in pids and len(set(pids)) == 7
+    assert p.alloc(tier=1) is None          # exhausted, not an error
+    assert p.stats["blocked"] == 1
+    for pid in pids:
+        p.decref(pid)
+    assert p.in_use() == 0 and p.check()
+
+
+def test_double_free_is_an_error():
+    p = PagePool(num_pages=4)
+    pid = p.alloc(tier=2)
+    p.decref(pid)
+    with pytest.raises(AssertionError):
+        p.decref(pid)
+
+
+def test_scratch_page_never_allocated_or_freed():
+    p = PagePool(num_pages=4)
+    assert all(p.alloc(1) != 0 for _ in range(3))
+    with pytest.raises(AssertionError):
+        p.decref(0)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["alloc", "free", "incref",
+                                           "decref_extra"]),
+                          st.integers(0, 30)), max_size=60),
+       st.integers(2, 12))
+def test_alloc_free_never_leaks_or_double_frees(ops, num_pages):
+    """Random op interleavings: refcounts stay consistent, the free list
+    never holds a live page, in_use() == pages with refcount > 0."""
+    p = PagePool(num_pages=num_pages)
+    live = {}                               # pid -> expected refcount
+    for op, arg in ops:
+        if op == "alloc":
+            pid = p.alloc(tier=1 + arg % 3)
+            if pid is not None:
+                live[pid] = 1
+        elif live:
+            pid = sorted(live)[arg % len(live)]
+            if op == "incref":
+                p.incref(pid)
+                live[pid] += 1
+            else:
+                p.decref(pid)
+                live[pid] -= 1
+                if live[pid] == 0:
+                    del live[pid]
+        p.check()
+    assert p.in_use() == len(live)
+    assert sum(live.values()) == sum(int(p.refcount[q])
+                                     for q in range(1, num_pages))
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 3), st.integers(1, 3),
+       st.lists(st.integers(0, 255), min_size=1, max_size=40),
+       st.integers(2, 16))
+def test_cross_tier_prefix_sharing_impossible(tier_a, tier_b, toks, ps):
+    """The prefix index is keyed by (tier, chain-hash, fill): a page
+    registered at tier A is only ever returned to tier A lookups."""
+    p = PagePool(num_pages=16, page_size=ps)
+    chunks = prefix_chunk_hashes(toks, ps)
+    pid = p.alloc(tier_a)
+    chash, fill = chunks[0]
+    p.register_prefix(pid, tier_a, chash, fill)
+    hit = p.lookup_prefix(tier_b, chash, fill)
+    if tier_a == tier_b:
+        assert hit == pid
+    else:
+        assert hit is None
+    assert p.lookup_prefix(None, chash, fill) is None    # untiered: closed
+    p.disable_sharing()
+    assert p.lookup_prefix(tier_a, chash, fill) is None  # fail closed
+    p.check()
+
+
+def test_prefix_index_entry_dies_with_page():
+    p = PagePool(num_pages=4, page_size=4)
+    (chash, fill), = prefix_chunk_hashes([1, 2, 3, 4], 4)
+    pid = p.alloc(2)
+    p.register_prefix(pid, 2, chash, fill)
+    assert p.lookup_prefix(2, chash, fill) == pid
+    p.decref(pid)
+    assert p.lookup_prefix(2, chash, fill) is None
+
+
+def test_chain_hash_commits_to_whole_prefix():
+    a = prefix_chunk_hashes([1, 2, 3, 4, 5, 6], 2)
+    b = prefix_chunk_hashes([9, 9, 3, 4, 5, 6], 2)
+    assert a[0] != b[0]
+    # identical chunk content, different prefix -> different hash
+    assert a[1] != b[1] and a[2] != b[2]
+    assert prefix_chunk_hashes([1, 2, 3, 4, 5, 6], 2) == a
+
+
+def test_trust_tier_mapping_matches_island_tiers():
+    assert trust_tier_for_sensitivity(1.0) == 1
+    assert trust_tier_for_sensitivity(0.8) == 1
+    assert trust_tier_for_sensitivity(0.6) == 2
+    assert trust_tier_for_sensitivity(0.2) == 3
+
+
+# ---------------------------------------------------- batcher integration
+
+@pytest.fixture(scope="module")
+def cfg():
+    from repro.configs.base import get_config
+    return get_config("smollm-135m").reduced()
+
+
+def test_paged_batcher_matches_stacked_logits(cfg):
+    """Greedy decodes through the page pool equal the dense stacked cache
+    for a mixed-length batch (the dense path is the oracle)."""
+    from repro.serving.batcher import ContinuousBatcher, \
+        PagedContinuousBatcher
+    prompts = ["short", "a somewhat longer request that spans pages",
+               "mid-size prompt here", "x" * 40]
+    b1 = ContinuousBatcher(cfg, num_slots=2, max_len=64)
+    b2 = PagedContinuousBatcher(cfg, num_slots=2, max_len=64, page_size=16)
+    for p in prompts:
+        b1.submit(p, max_new_tokens=4)
+        b2.submit(p, max_new_tokens=4, trust_tier=2)
+    assert b1.run_until_done() == b2.run_until_done()
+    assert b2.pool.in_use() == 0            # completion freed every page
+    assert b2.pool.check()
+
+
+def test_copy_on_write_preserves_logits_parity(cfg):
+    """Two identical prompts share every prompt page including the partial
+    tail page; the first decode write COWs it, and both sequences still
+    decode exactly what the dense cache decodes."""
+    from repro.serving.batcher import ContinuousBatcher, \
+        PagedContinuousBatcher
+    prompt = "identical prompt shared by two live sequences"
+    b1 = ContinuousBatcher(cfg, num_slots=2, max_len=64)
+    b2 = PagedContinuousBatcher(cfg, num_slots=2, max_len=64, page_size=16)
+    for _ in range(2):
+        b1.submit(prompt, max_new_tokens=5)
+        b2.submit(prompt, max_new_tokens=5, trust_tier=1)
+    d1, d2 = b1.run_until_done(), b2.run_until_done()
+    assert d1 == d2
+    assert b2.pool.stats["cow_copies"] >= 1
+    assert b2.stats["share_hits"] > 0
+    assert b2.pool.in_use() == 0 and b2.pool.check()
+
+
+def test_same_tier_sharing_lowers_occupancy(cfg):
+    from repro.serving.batcher import PagedContinuousBatcher
+    head = "y" * 48                          # 3 full 16-token pages
+    prompts = [head + f" tail{i}" for i in range(4)]
+
+    def peak(sharing, tiers):
+        b = PagedContinuousBatcher(cfg, num_slots=4, max_len=64,
+                                   page_size=16, sharing=sharing)
+        for p, t in zip(prompts, tiers):
+            b.submit(p, max_new_tokens=3, trust_tier=t)
+        b.run_until_done()
+        assert b.pool.check()
+        return b.pool.stats["peak_in_use"], b.pool.stats["share_hits"]
+
+    shared_peak, shared_hits = peak(True, [1, 1, 1, 1])
+    solo_peak, solo_hits = peak(False, [1, 1, 1, 1])
+    cross_peak, cross_hits = peak(True, [1, 2, 3, None])
+    assert shared_hits > 0 and shared_peak < solo_peak
+    assert solo_hits == 0
+    assert cross_hits == 0 and cross_peak == solo_peak
+
+
+def test_pool_exhaustion_blocks_then_recovers(cfg):
+    """A pool too small for the whole queue defers admissions (blocked
+    counter) but completes everything once pages free up."""
+    from repro.serving.batcher import PagedContinuousBatcher
+    b = PagedContinuousBatcher(cfg, num_slots=3, max_len=64, page_size=16,
+                               num_pages=6,     # 5 usable pages < 3 seqs
+                               sharing=False)   # no dedup rescue
+    rids = [b.submit(f"request number {i}", max_new_tokens=3, trust_tier=2)
+            for i in range(4)]
+    done = b.run_until_done()
+    assert sorted(done) == sorted(rids)
+    assert b.pool.stats["blocked"] > 0
+    assert b.pool.in_use() == 0 and b.pool.check()
+
+
+def test_never_fitting_request_rejected_not_crashed(cfg):
+    """A request that could not run even alone (prompt + decode > pool)
+    resolves to a None result (distinguishable from real empty output)
+    instead of raising into the serving loop or self-preempting forever."""
+    from repro.serving.batcher import PagedContinuousBatcher
+    b = PagedContinuousBatcher(cfg, num_slots=1, max_len=64, page_size=16,
+                               num_pages=3)      # 2 usable pages
+    big = b.submit("z" * 50, max_new_tokens=8, trust_tier=1)   # needs 4
+    ok = b.submit("tiny", max_new_tokens=3, trust_tier=1)
+    done = b.run_until_done(max_ticks=100)
+    assert done[big] is None and b.stats["rejected_too_large"] == 1
+    assert len(done[ok]) > 0
+    assert b.pool.in_use() == 0 and b.pool.check()
+
+
+def test_lockstep_stall_preempts_instead_of_deadlocking(cfg):
+    """Sequences marching in lockstep on an oversubscribed pool all hit a
+    page boundary with zero free pages in the same tick; the batcher must
+    preempt one (release + requeue) rather than spin forever."""
+    from repro.serving.batcher import PagedContinuousBatcher
+    # 2 slots x 2-page prompts fill all 4 usable pages at admission; the
+    # first decode token then needs a 3rd page for BOTH slots at once
+    b = PagedContinuousBatcher(cfg, num_slots=2, max_len=64, page_size=16,
+                               num_pages=5, sharing=False)
+    rids = [b.submit("a" * 30 + str(i), max_new_tokens=4, trust_tier=2)
+            for i in range(2)]          # 31 chars + BOS = 2 exact pages
+    done = b.run_until_done(max_ticks=200)
+    assert sorted(done) == sorted(rids)
+    assert b.stats["ticks"] < 200, "spun to the tick cap (deadlock)"
+    assert b.stats["preemptions"] >= 1
+    assert b.pool.in_use() == 0 and b.pool.check()
+
+
+def test_max_len_must_divide_into_pages(cfg):
+    from repro.serving.batcher import PagedContinuousBatcher
+    with pytest.raises(ValueError, match="multiple of page_size"):
+        PagedContinuousBatcher(cfg, num_slots=2, max_len=72, page_size=16)
+
+
+def test_orchestrator_pool_pressure_feeds_routing(cfg, stack):
+    """Paged batchers report occupancy/blocked through the orchestrator:
+    TIDE's mem/inflight terms move (the routing kernel's capacity and
+    queueing-latency inputs) and LIGHTHOUSE carries the telemetry."""
+    from repro.core.workload import healthcare_workload
+    from repro.serving.engine import TickOrchestrator, build_island_batchers
+    reg, mist, tide, lh, waves = stack
+    bats = build_island_batchers(cfg, reg, cache="paged", max_len=64,
+                                 slots_per_capacity_unit=1.0)
+    orch = TickOrchestrator(waves, reg, bats)
+    for req, _ in healthcare_workload(8, seed=3):
+        orch.submit(req, max_new_tokens=3)
+    orch.run_until_done()
+    pools = lh.pool_telemetry()
+    assert pools and all("share_hit_rate" in t for t in pools.values())
+    served = [iid for iid, t in pools.items() if t["peak_in_use"] > 0]
+    assert served
+    assert any(tide._st(iid).mem > 0.10 for iid in served)
+    s = orch.stats()
+    assert s["kv_pools"] == pools
+
+
+def test_crashed_tide_disables_sharing_fail_closed(cfg, stack):
+    from repro.core.waves import Request
+    from repro.serving.engine import TickOrchestrator
+    from repro.serving.batcher import PagedContinuousBatcher
+    reg, mist, tide, lh, waves = stack
+    bat = PagedContinuousBatcher(cfg, num_slots=2, max_len=64)
+    orch = TickOrchestrator(waves, reg, {"laptop": bat})
+    tide.crashed = True
+    # crashed TIDE -> primary still executes locally; sharing must be off
+    orch.submit(Request(query="personal journal entry",
+                        priority="primary"), max_new_tokens=3)
+    orch.run_until_done()
+    assert not bat.pool.sharing_enabled
+    assert bat.pool.lookup_prefix(1, "deadbeef", 16) is None
