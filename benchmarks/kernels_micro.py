@@ -51,6 +51,40 @@ def run():
     o_ref = ref.flash_attention(qf, kf, kf, D ** -0.5)
     err = float(jnp.max(jnp.abs(o - o_ref)))
     lines.append(("pallas_interp/flash_256", us, f"allclose_err={err:.1e}"))
+    # chunked-prefill kernel vs the monolithic flash prefill: replay one
+    # 128-token prompt through page-gathered chunks of each size (this is
+    # the serving admission path); parity is against the same full causal
+    # attention the monolithic kernel computes
+    from repro.kernels.chunked_prefill import chunked_prefill_attention
+    Bc, Hc, Hkvc, Dc, psc = 1, 8, 2, 64, 16
+    Sc = 128
+    Nc = Sc // psc
+    qc = jax.random.normal(key, (Bc, Sc, Hc, Dc), jnp.float32)
+    kc = jax.random.normal(jax.random.PRNGKey(5), (Bc, Sc, Hkvc, Dc))
+    vc = jax.random.normal(jax.random.PRNGKey(6), (Bc, Sc, Hkvc, Dc))
+    kpc = kc[0].reshape(Nc, psc, Hkvc, Dc)
+    vpc = vc[0].reshape(Nc, psc, Hkvc, Dc)
+    btc = jnp.arange(Nc)[None]
+    qfc = qc.transpose(0, 2, 1, 3).reshape(Bc * Hc, Sc, Dc)
+    kfc = kc.transpose(0, 2, 1, 3).reshape(Bc * Hkvc, Sc, Dc)
+    vfc = vc.transpose(0, 2, 1, 3).reshape(Bc * Hkvc, Sc, Dc)
+    us = _time(lambda a, b, c: flash_attention(a, b, c, block_q=64,
+                                               block_k=64),
+               qfc, kfc, vfc, reps=2)
+    o_mono = flash_attention(qfc, kfc, vfc, block_q=64, block_k=64)
+    o_mono = o_mono.reshape(Bc, Hc, Sc, Dc).transpose(0, 2, 1, 3)
+    lines.append(("pallas_interp/prefill_monolithic_128", us,
+                  "one dispatch"))
+    for T in (16, 32, 64):
+        def replay(q=qc, T=T):
+            outs = [chunked_prefill_attention(
+                q[:, s:s + T], kpc, vpc, btc[:, :(s + T) // psc],
+                jnp.array([s], jnp.int32)) for s in range(0, Sc, T)]
+            return jnp.concatenate(outs, axis=1)
+        us = _time(replay, reps=2)
+        err = float(jnp.max(jnp.abs(replay() - o_mono)))
+        lines.append((f"pallas_interp/prefill_chunked_T{T}", us,
+                      f"{Sc // T} dispatches allclose_err={err:.1e}"))
     # SSD XLA vs kernel path
     from repro.kernels.ssd import ssd_full
     from repro.models.ssm import ssd_chunked

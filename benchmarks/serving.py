@@ -1,12 +1,28 @@
 """Serving-stack benchmark: real reduced-model prefill/decode throughput on
 the local SHORE island, end-to-end engine requests/second (routing + MIST
-+ execution), the per-request vs tick-batched A/B, and the stacked-vs-paged
-KV-cache A/B (occupancy + trust-tiered prefix-share hit rate) — CPU numbers.
++ execution), the per-request vs tick-batched A/B, the stacked-vs-paged
+KV-cache A/B (occupancy + trust-tiered prefix-share hit rate), and the
+monolithic-vs-chunked prefill A/B — CPU numbers.
 
 ``--cache {stacked,paged}`` picks the cache manager for the tick-batched
 leg; the default runs BOTH and emits a ``BENCH_serving.json`` artifact
-(req/s per cache mode, cache-page occupancy, prefix-share hit rate, and
-the tier-isolation check) that CI uploads.
+that CI uploads. Artifact schema highlights:
+
+* per-mode ``ttft_ticks_p50`` / ``ttft_work_p50`` — ticks-to-first-token
+  and work-to-first-token, where "work" is the batcher's deterministic
+  work clock (every token the model dispatched); work-TTFT exposes
+  head-of-line blocking that virtual ticks cannot see, so it is the
+  CI-gated metric;
+* per-mode ``phase`` — admissions vs prefill dispatches, prefill vs
+  decode token/step split, and ``prefix_tokens_skipped``;
+* ``shared_prefix`` — the 8-requests-x-64-token-shared-head workload,
+  including the ``prefix_skip_ge_50pct`` check (chunked admission must
+  skip >= 50% of prompt FLOPs vs the full-prompt path);
+* ``mixed_prefill`` — long prompts submitted ahead of short ones, full vs
+  chunked prefill on identical pools: short-prompt TTFT must improve
+  (``short_ttft_improves``) without regressing total dispatched work
+  (``total_work_no_regress``). Failed checks exit nonzero — that is the
+  CI gate.
 """
 from __future__ import annotations
 
@@ -96,9 +112,11 @@ def run(cache_modes=("stacked", "paged"), json_path=None):
     if "paged" in cache_modes:
         artifact["shared_prefix"] = shared_prefix_ab(cfg, lines,
                                                      params=srv.params)
+        artifact["mixed_prefill"] = mixed_prefill_ab(cfg, lines,
+                                                     params=srv.params)
         # req/s comparison is wall-clock on shared runners (noisy), so it
-        # is recorded but only the deterministic privacy/memory checks
-        # below gate the run
+        # is recorded but only the deterministic privacy/memory/TTFT
+        # checks below gate the run
         if "stacked" in cache_modes:
             artifact["paged_ge_stacked_req_s"] = (
                 artifact["cache_modes"]["paged"]["req_s"]
@@ -110,12 +128,38 @@ def run(cache_modes=("stacked", "paged"), json_path=None):
         lines.append(("serve/artifact", 0.0, json_path))
     # record failures on the lines themselves; __main__ exits nonzero
     # AFTER printing every measured row (they're the diagnostic)
-    checks = artifact.get("shared_prefix", {}).get("checks", {})
+    checks = dict(artifact.get("shared_prefix", {}).get("checks", {}))
+    checks.update({f"mixed/{k}": ok for k, ok in artifact.get(
+        "mixed_prefill", {}).get("checks", {}).items()})
     global _FAILED_CHECKS
     _FAILED_CHECKS = [k for k, ok in checks.items() if not ok]
     for k in _FAILED_CHECKS:
         lines.append((f"serve/CHECK_FAILED/{k}", 0.0, "see artifact"))
     return lines
+
+
+def _ttft_stats(batcher, rids=None):
+    """p50 ticks/work to first token from the batcher's request log."""
+    recs = [r for rid, r in batcher.request_log.items()
+            if (rids is None or rid in rids) and "ttft_work" in r]
+    if not recs:
+        return {}
+    ticks = sorted(r["ttft_ticks"] for r in recs)
+    work = sorted(r["ttft_work"] for r in recs)
+    return {"ttft_ticks_p50": ticks[len(ticks) // 2],
+            "ttft_work_p50": work[len(work) // 2]}
+
+
+def _phase_stats(batcher):
+    """Admission/prefill/decode split for the artifact (the ``prefills``
+    counter alone is ambiguous under chunked admission)."""
+    st = batcher.stats
+    return {"admissions": st["admissions"],
+            "prefill_dispatches": st["prefill_dispatches"],
+            "prefill_tokens": batcher.work_clock - st["decode_tokens"],
+            "prefix_tokens_skipped": st.get("prefix_tokens_skipped", 0),
+            "decode_steps": st["decode_steps"],
+            "decode_tokens": st["decode_tokens"]}
 
 
 _FAILED_CHECKS: list = []
@@ -182,7 +226,8 @@ def routed_throughput(cfg, n_requests=16, max_new=8, slots=8,
     pool_note = ""
     stats = {"req_s": round(rps_bat, 2), "decode_tok_s": round(
         toks / dt_bat, 1), "speedup_vs_per_request": round(
-        rps_bat / rps_seq, 2), "completed": done_bat}
+        rps_bat / rps_seq, 2), "completed": done_bat,
+        "phase": _phase_stats(bat), **_ttft_stats(bat)}
     if cache == "paged":
         t = bat.pool.telemetry()
         pool_note = (f" pages_peak={t['peak_in_use']}"
@@ -222,14 +267,21 @@ def shared_prefix_ab(cfg, lines, n_requests=8, max_new=6, page_size=16,
         b.run_until_done()
         dt = time.perf_counter() - t0
         t = b.pool.telemetry()
+        skipped = b.stats["prefix_tokens_skipped"]
+        total = sum(r.get("prompt_tokens", 0)
+                    for r in b.request_log.values())
         lines.append((f"serve/shared_prefix_{label}", dt * 1e6,
                       f"pages_peak={t['peak_in_use']}"
                       f" hit_rate={t['share_hit_rate']}"
-                      f" hits={t['share_hits']}"))
+                      f" skipped={skipped}/{total}tok"))
         return {"pages_peak": t["peak_in_use"],
                 "share_hit_rate": t["share_hit_rate"],
                 "share_hits": t["share_hits"],
-                "cow_copies": t["cow_copies"]}
+                "cow_copies": t["cow_copies"],
+                "prompt_tokens": total,
+                "prefill_tokens_dispatched":
+                    b.stats["prefill_chunk_tokens"],
+                "prefix_tokens_skipped": skipped}
 
     out["same_tier"] = drive([1] * n_requests, True, "same_tier")
     out["no_sharing"] = drive([1] * n_requests, False, "no_sharing")
@@ -239,6 +291,14 @@ def shared_prefix_ab(cfg, lines, n_requests=8, max_new=6, page_size=16,
         "same_tier_hit_rate_nonzero": out["same_tier"]["share_hit_rate"] > 0,
         "same_tier_fewer_pages":
             out["same_tier"]["pages_peak"] < out["no_sharing"]["pages_peak"],
+        # the tentpole win: chunked admission must skip >= 50% of prompt
+        # FLOPs (dispatched tokens) on the shared-head workload vs the
+        # full-prompt path, which always dispatches every prompt token
+        "prefix_skip_ge_50pct":
+            2 * out["same_tier"]["prefix_tokens_skipped"]
+            >= out["same_tier"]["prompt_tokens"],
+        "no_sharing_skips_nothing":
+            out["no_sharing"]["prefix_tokens_skipped"] == 0,
         "mixed_tier_no_cross_tier_hits": True,  # refined below
     }
     # mixed tiers: requests of the SAME tier may still share; the
@@ -249,6 +309,69 @@ def shared_prefix_ab(cfg, lines, n_requests=8, max_new=6, page_size=16,
     out["distinct_tier"] = distinct
     out["checks"]["mixed_tier_no_cross_tier_hits"] = \
         distinct["share_hits"] == 0
+    out["checks"]["distinct_tier_no_skip"] = \
+        distinct["prefix_tokens_skipped"] == 0
+    return out
+
+
+LONG_PROMPT_CHARS = 75            # + BOS = 76 tokens = 5 pages @ 16
+
+
+def mixed_prefill_ab(cfg, lines, params=None, page_size=16, n_long=3,
+                     n_short=6, max_new=5):
+    """Head-of-line A/B: long prompts submitted AHEAD of short ones, full
+    monolithic vs chunked budgeted prefill on identically-sized paged
+    pools. TTFT is measured on the deterministic work clock (every token
+    the model dispatched before the request's first token), so the
+    improvement check is noise-free and gates CI; wall-clock req/s is
+    recorded for context."""
+    from repro.serving.batcher import make_batcher
+    longs = [(f"case history {i:02d} ") + "y" * (LONG_PROMPT_CHARS - 16)
+             for i in range(n_long)]
+    shorts = [f"vitals {i}" for i in range(n_short)]
+    out = {}
+
+    def drive(prefill):
+        b = make_batcher(cfg, cache="paged", prefill=prefill,
+                         prefill_token_budget=2 * page_size,
+                         num_slots=n_long + n_short, max_len=96,
+                         page_size=page_size, params=params)
+        for p in longs:
+            b.submit(p, max_new_tokens=max_new, trust_tier=2)
+        rids_short = [b.submit(p, max_new_tokens=max_new, trust_tier=2)
+                      for p in shorts]
+        t0 = time.perf_counter()
+        done = b.run_until_done()
+        dt = time.perf_counter() - t0
+        short_work = sorted(b.request_log[r]["ttft_work"]
+                            for r in rids_short)
+        stats = {"req_s": round(len(done) / dt, 2),
+                 "total_ticks": b.stats["ticks"],
+                 "total_work": b.work_clock,
+                 "short_ttft_work_p50": short_work[len(short_work) // 2],
+                 "short_ttft_work_max": short_work[-1],
+                 "phase": _phase_stats(b), **_ttft_stats(b)}
+        lines.append((f"serve/mixed_prefill_{prefill}", dt * 1e6,
+                      f"short_ttft_p50={stats['short_ttft_work_p50']}work"
+                      f" ticks={stats['total_ticks']}"
+                      f" {stats['req_s']} req/s"))
+        return stats
+
+    out["full"] = drive("full")
+    out["chunked"] = drive("chunked")
+    out["checks"] = {
+        # chunked interleaving must cut short-prompt TTFT: under the
+        # monolithic path every short waits behind the longs' full-prompt
+        # admission dispatches
+        "short_ttft_improves":
+            out["chunked"]["short_ttft_work_p50"]
+            < out["full"]["short_ttft_work_p50"],
+        # ... without dispatching more total tokens (prefill fills +
+        # decode tokens are mode-invariant modulo preemption)
+        "total_work_no_regress":
+            out["chunked"]["total_work"]
+            <= out["full"]["total_work"] * 1.05,
+    }
     return out
 
 

@@ -39,11 +39,18 @@ class Lighthouse:
     # --------------------------------------------------------- telemetry
     def report_pool(self, island_id: str, stats: dict):
         """Publish a SHORE island's KV page-pool counters (occupancy,
-        prefix-share hit rate, COW copies, blocked admissions) with a
-        heartbeat timestamp; ``pool_telemetry()`` is the mesh-wide view the
-        dashboards/benchmarks read."""
+        prefix-share hit rate, COW copies, blocked admissions — plus the
+        chunked-prefill signals ``prefill_backlog``, prompt tokens not yet
+        prefilled, and ``prefix_tokens_skipped``, prompt FLOPs avoided via
+        prefix sharing) with a heartbeat timestamp; ``pool_telemetry()``
+        is the mesh-wide view the dashboards/benchmarks read."""
         if island_id in self.registry:
             self._pool_stats[island_id] = dict(stats, reported_at=self.clock)
+
+    def mesh_prefill_backlog(self) -> int:
+        """Total undispatched prefill tokens across reporting islands."""
+        return sum(int(s.get("prefill_backlog", 0))
+                   for s in self._pool_stats.values())
 
     def pool_telemetry(self) -> dict:
         return {iid: dict(s) for iid, s in self._pool_stats.items()}

@@ -40,6 +40,11 @@ LOAD_MIX = {"gpu": 0.8, "cpu": 0.3, "mem": 0.2}
 QUEUE_FACTOR = 2.0
 RECOVERY_CAP = 0.99
 
+# One queued work unit's worth of undispatched prefill-chunk tokens: a
+# serving island's prefill backlog (chunked admission queue) converts to
+# inflight work at this rate before feeding the queueing-latency term.
+PREFILL_BACKLOG_TOKENS_PER_UNIT = 64.0
+
 
 @dataclass
 class LoadState:
@@ -142,23 +147,27 @@ class TIDE:
         return False
 
     def report_pool_pressure(self, island_id: str, occupancy: float,
-                             blocked: int = 0):
+                             blocked: int = 0, prefill_backlog: int = 0):
         """KV page-pool pressure feedback from a SHORE island's serving
         stack (serving.kvpool): pool occupancy raises the island's ``mem``
         utilization — cutting capacity R = 1 - max(cpu, gpu, mem) and with
-        it admission — while admissions blocked on page exhaustion count as
-        queued inflight work, inflating the queueing-latency term the
-        routing kernel scores (route_batch_tick packs ``inflight`` via
-        pack_tide_state). Both signals decay with the virtual clock like
-        any other load."""
+        it admission — while admissions blocked on page exhaustion and the
+        island's prefill backlog (``prefill_backlog`` prompt tokens
+        admitted/queued but not yet prefilled under the chunked-admission
+        budget) count as queued inflight work, inflating the queueing-
+        latency term the routing kernel scores (route_batch_tick packs
+        ``inflight`` via pack_tide_state) — so the batched router steers
+        new work away from prefill-saturated islands. All signals decay
+        with the virtual clock like any other load."""
         island = self.registry.get(island_id)
         if island.unbounded:
             return
         st = self._st(island_id)
         st.mem = min(1.0, max(st.mem, float(occupancy)))
-        if blocked:
+        queued = blocked + prefill_backlog / PREFILL_BACKLOG_TOKENS_PER_UNIT
+        if queued:
             st.inflight = max(st.inflight,
-                              blocked / max(island.capacity_units, 1e-6))
+                              queued / max(island.capacity_units, 1e-6))
 
     def effective_latency_ms(self, island) -> float:
         """Queueing-aware latency: base RTT+inference inflated by inflight

@@ -1,0 +1,129 @@
+"""Chunked-prefill GQA attention Pallas TPU kernel: a page-aligned chunk
+of Q tokens per sequence attends causally over ALL prior context (earlier
+prompt pages + the chunk itself) gathered through a per-sequence block
+table over a shared page pool.
+
+This is the prefill half of the paged serving stack: where
+``paged_attention.py`` advances ONE decode token per sequence, this kernel
+advances a whole chunk of ``T`` fresh prompt tokens whose K/V has already
+been scattered into the chunk's pool page(s). Because context arrives
+through the block table, a prefix-sharing batcher can skip recomputing
+chunks whose pages it attached to — the following chunk simply gathers the
+shared pages like any other context.
+
+Layout matches ``paged_attention.py`` (vLLM-style): ``k_pages``/``v_pages``
+are ``(num_pages, page_size, Hkv, D)`` shared by every sequence;
+``block_table[b, n]`` names the physical page backing logical positions
+``[n*page_size, (n+1)*page_size)`` of sequence ``b``; ``start_pos[b]`` is
+the absolute position of the chunk's first token. Both arrive via scalar
+prefetch (SMEM) so each grid step's page index is known before its DMA
+issues.
+
+Grid (B, Hkv, q_tiles, n_pages): the page dimension is innermost and
+sequential, carrying the online-softmax state (m, l, acc) in VMEM scratch
+per q-tile — the same blocking scheme as ``flash_attention.py`` with the
+page gather replacing the contiguous k-block index map. Causality is
+enforced per (q row, k slot) against absolute positions, and whole pages
+strictly in the causal future of a q-tile are predicated off, so chunk
+cost tracks context actually attended, not table capacity.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _kernel(bt_ref, start_ref, q_ref, k_ref, v_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, scale, ps, bq, npages):
+    b = pl.program_id(0)
+    qi = pl.program_id(2)
+    ni = pl.program_id(3)
+    start = start_ref[b]
+
+    @pl.when(ni == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def _compute():
+        q = q_ref[0, :, 0].astype(jnp.float32)       # (bq, G, D)
+        k = k_ref[0, :, 0].astype(jnp.float32)       # (ps, D)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((2,), (1,)), ((), ()))) * scale  # (bq, G, ps)
+        qpos = (start + qi * bq
+                + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0))
+        kpos = ni * ps + jax.lax.broadcasted_iota(jnp.int32, s.shape, 2)
+        s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=2))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=2)
+        acc_ref[...] = (acc_ref[...] * corr[..., None] +
+                        jax.lax.dot_general(p, v, (((2,), (0,)), ((), ()))))
+        m_ref[...] = m_new
+
+    # skip whole logical pages strictly in this q-tile's causal future
+    pl.when(ni * ps <= start + qi * bq + bq - 1)(_compute)
+
+    @pl.when(ni == npages - 1)
+    def _final():
+        o_ref[0, :, 0] = (acc_ref[...] /
+                          jnp.maximum(l_ref[...], 1e-30)[..., None]
+                          ).astype(o_ref.dtype)
+
+
+def chunked_prefill_attention(q, k_pages, v_pages, block_table, start_pos,
+                              scale=None, block_q=None, interpret=True):
+    """q (B, T, H, D) — T fresh tokens per sequence, token t at absolute
+    position ``start_pos[b] + t``; k_pages/v_pages (P, page_size, Hkv, D)
+    shared pool ALREADY holding the chunk's own K/V; block_table (B, N)
+    int32 physical page ids covering positions [0, start+T); start_pos
+    (B,) int32. Returns (B, T, H, D)."""
+    B, T, H, D = q.shape
+    P, ps, Hkv, _ = k_pages.shape
+    N = block_table.shape[1]
+    G = H // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    bq = min(block_q or T, T)
+    assert T % bq == 0, f"chunk len {T} not a multiple of q tile {bq}"
+    nq = T // bq
+    qg = q.reshape(B, T, Hkv, G, D)
+    bt = jnp.asarray(block_table, jnp.int32)
+    start = jnp.asarray(start_pos, jnp.int32).reshape(B)
+
+    kern = functools.partial(_kernel, scale=scale, ps=ps, bq=bq, npages=N)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hkv, nq, N),
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, G, D),
+                         lambda b, h, qi, ni, bt, sp: (b, qi, h, 0, 0)),
+            pl.BlockSpec((1, ps, 1, D),
+                         lambda b, h, qi, ni, bt, sp: (bt[b, ni], 0, h, 0)),
+            pl.BlockSpec((1, ps, 1, D),
+                         lambda b, h, qi, ni, bt, sp: (bt[b, ni], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, G, D),
+                               lambda b, h, qi, ni, bt, sp: (b, qi, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq, G), jnp.float32),
+            pltpu.VMEM((bq, G), jnp.float32),
+            pltpu.VMEM((bq, G, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, T, Hkv, G, D), q.dtype),
+        interpret=interpret,
+    )(bt, start, qg, k_pages, v_pages)
+    return out.reshape(B, T, H, D)

@@ -14,6 +14,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import chunked_prefill as _chunk
 from repro.kernels import decode_attention as _dec
 from repro.kernels import flash_attention as _fa
 from repro.kernels import paged_attention as _paged
@@ -54,6 +55,17 @@ def paged_decode_attention(q, k_pages, v_pages, block_table, valid_lens,
     return _paged.paged_decode_attention(q, k_pages, v_pages, block_table,
                                          valid_lens, scale,
                                          interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("scale", "block_q"))
+def chunked_prefill_attention(q, k_pages, v_pages, block_table, start_pos,
+                              scale=None, block_q=None):
+    """q (B,T,H,D) one page-aligned prefill chunk per sequence;
+    k_pages/v_pages (P,page_size,Hkv,D) shared pool already holding the
+    chunk's K/V; block_table (B,N); start_pos (B,) absolute chunk starts."""
+    return _chunk.chunked_prefill_attention(q, k_pages, v_pages, block_table,
+                                            start_pos, scale, block_q=block_q,
+                                            interpret=_interpret())
 
 
 @partial(jax.jit, static_argnames=("chunk",))

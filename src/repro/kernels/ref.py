@@ -64,6 +64,31 @@ def paged_decode_attention(q, k_pages, v_pages, block_table, valid_lens,
     return o.reshape(B, H, D).astype(q.dtype)
 
 
+def chunked_prefill_attention(q, k_pages, v_pages, block_table, start_pos,
+                              scale):
+    """q (B, T, H, D) — T fresh tokens, token t of sequence b at absolute
+    position ``start_pos[b] + t``; k_pages/v_pages (P, page_size, Hkv, D)
+    already holding the chunk's own K/V; block_table (B, N) int32;
+    start_pos (B,) int32. Causal over absolute positions."""
+    B, T, H, D = q.shape
+    P, ps, Hkv, _ = k_pages.shape
+    N = block_table.shape[1]
+    G = H // Hkv
+    k = k_pages[block_table].reshape(B, N * ps, Hkv, D)
+    v = v_pages[block_table].reshape(B, N * ps, Hkv, D)
+    qg = q.reshape(B, T, Hkv, G, D)
+    s = jnp.einsum("bthgd,bkhd->bthgk", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    start = jnp.asarray(start_pos, jnp.int32).reshape(B)
+    qpos = start[:, None] + jnp.arange(T)[None]          # (B, T)
+    kpos = jnp.arange(N * ps)                            # (K,)
+    mask = kpos[None, None, :] <= qpos[:, :, None]       # (B, T, K)
+    s = jnp.where(mask[:, :, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bthgk,bkhd->bthgd", p, v.astype(jnp.float32))
+    return o.reshape(B, T, H, D).astype(q.dtype)
+
+
 def ssd_chunk(x, dt, a, B_, C_):
     """Per-chunk SSD pieces (no inter-chunk recurrence).
 

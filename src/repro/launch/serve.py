@@ -71,6 +71,12 @@ def main(argv=None):
                          "dense stacked slot rows or the trust-tiered "
                          "paged pool; auto = paged when the arch supports "
                          "it (--batched only)")
+    ap.add_argument("--prefill", default="chunked",
+                    choices=("chunked", "full"),
+                    help="paged-pool prefill policy: prefix-aware chunked "
+                         "admission (skips shared-prefix FLOPs, budgeted "
+                         "prefill/decode interleave) or the monolithic "
+                         "full-prompt dispatch (--batched only)")
     ap.add_argument("--train-classifier", action="store_true",
                     help="train the MIST stage-2 JAX classifier first")
     args = ap.parse_args(argv)
@@ -90,6 +96,7 @@ def main(argv=None):
         from repro.serving.engine import TickOrchestrator
         batchers = {iid: make_batcher(cfg, cache=args.cache,
                                       num_slots=args.slots,
+                                      prefill=args.prefill,
                                       max_len=128, seed=args.seed)
                     for iid in ("laptop", "home-nas")}
         eng = TickOrchestrator(waves, reg, batchers, seed=args.seed)

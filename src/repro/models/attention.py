@@ -107,6 +107,21 @@ def attend_decode_paged(q, k_pages, v_pages, block_table, valid_lens, scale):
     return o[:, None]
 
 
+def attend_chunk_paged(q, k_pages, v_pages, block_table, start_pos, scale):
+    """Page-aligned prefill chunk against the paged pool: q (B,T,H,D) —
+    T fresh tokens already scattered into the pool — attends causally over
+    everything the block table covers; start_pos (B,) absolute position of
+    the chunk's first token."""
+    from repro import kernels as _k
+    if _k.enabled():
+        from repro.kernels import ops as _kops
+        return _kops.chunked_prefill_attention(q, k_pages, v_pages,
+                                               block_table, start_pos, scale)
+    from repro.kernels import ref as _kref
+    return _kref.chunked_prefill_attention(q, k_pages, v_pages, block_table,
+                                           start_pos, scale)
+
+
 def attend_decode(q, k_cache, v_cache, valid_len, scale):
     """One-token decode: q (B,1,H,D); caches (B,S,Hkv,D); valid_len scalar
     (number of filled slots; ring buffers pass their fill count)."""
@@ -155,15 +170,21 @@ def attn_cache_spec(cfg, batch, max_len, window=None):
 
 
 def attn_apply(cfg, p, x, positions, *, mode, cache=None, window=None,
-               use_blocked=True, triangular=True, block_table=None):
-    """mode 'full' (train/prefill) or 'decode' (x is (B,1,d), positions is a
-    scalar absolute position — or, for paged caches, a (B,) vector of
-    per-sequence positions). Returns (x + attn_out, new_cache_or_None).
+               use_blocked=True, triangular=True, block_table=None,
+               dst_page=None):
+    """mode 'full' (train/prefill), 'chunk' (paged chunked prefill: x is
+    (1, T, d) with T == page_size, positions a (T,) vector of absolute
+    positions) or 'decode' (x is (B,1,d), positions is a scalar absolute
+    position — or, for paged caches, a (B,) vector of per-sequence
+    positions). Returns (x + attn_out, new_cache_or_None).
 
     A decode cache containing ``k_pages``/``v_pages`` (built by
     ``serving.kvpool.PagePool``) selects the paged path: the new token's
     K/V is scattered into its block-table page and attention gathers
-    through ``block_table`` (B, N)."""
+    through ``block_table`` (B, N). Chunk mode scatters the whole chunk's
+    K/V onto ``dst_page`` (the reserved scratch page when the chunk is
+    prefix-shared and its real page already holds identical K/V) before
+    gathering."""
     B = x.shape[0]
     H, Hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     scale = hd ** -0.5
@@ -205,6 +226,29 @@ def attn_apply(cfg, p, x, positions, *, mode, cache=None, window=None,
             else:  # windowed cache: keep the last W tokens
                 new_k, new_v = kd[:, -W:], vd[:, -W:]
             new_cache = {"k": new_k, "v": new_v}
+    elif mode == "chunk":  # page-aligned prefill chunk into the paged pool
+        pos = positions          # (T,) absolute positions of the chunk
+        S = x.shape[1]
+        ps = cache["k_pages"].shape[-3]
+        assert B == 1 and S % ps == 0, (
+            f"chunk mode is whole pool pages of one sequence, got batch "
+            f"{B} x {S} tokens (page_size {ps})")
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+        kd = k.astype(cache["k_pages"].dtype)
+        vd = v.astype(cache["v_pages"].dtype)
+        # write the fresh chunk's K/V onto its pages BEFORE the gather so
+        # the chunk attends to itself through the block table like any
+        # other context; dst_page entries == scratch (0) mask the write
+        # for prefix-shared pages (their pool page already holds it)
+        C = S // ps
+        new_kp = cache["k_pages"].at[dst_page].set(
+            kd[0].reshape(C, ps, *kd.shape[2:]))
+        new_vp = cache["v_pages"].at[dst_page].set(
+            vd[0].reshape(C, ps, *vd.shape[2:]))
+        o = attend_chunk_paged(q, new_kp, new_vp, block_table, pos[:1],
+                               scale)
+        new_cache = {"k_pages": new_kp, "v_pages": new_vp}
     elif "k_pages" in cache:  # decode against the paged pool
         pos = positions          # scalar or (B,) absolute positions
         posb = jnp.zeros((B,), jnp.int32) + pos

@@ -195,7 +195,7 @@ class Model:
 
     # ------------------------------------------------------------ forward
     def _apply_layer(self, p, bt, x, positions, mode, cache, window,
-                     triangular=True, block_table=None):
+                     triangular=True, block_table=None, dst_page=None):
         kw = {}
         if bt in ("attn", "mla"):
             kw["triangular"] = triangular
@@ -203,6 +203,8 @@ class Model:
             kw["window"] = window or self.cfg.attn_window
             if block_table is not None:
                 kw["block_table"] = block_table
+            if dst_page is not None:
+                kw["dst_page"] = dst_page
         c_in = cache["mixer"] if cache is not None else None
         x, new_c = BLOCK_APPLY[bt](self.cfg, p["mixer"], x, positions,
                                    mode=mode, cache=c_in, **kw)
@@ -216,14 +218,20 @@ class Model:
 
     def forward(self, params, *, tokens=None, embeddings=None, mode="full",
                 cache=None, pos=None, window=None, remat=False,
-                triangular=True, block_table=None):
+                triangular=True, block_table=None, dst_page=None):
         """Returns (logits, new_cache, aux_loss).
 
         mode='full': tokens (B,S) and/or embeddings (B,P,d); positions 0..S-1.
         mode='decode': tokens (B,1); ``pos`` scalar absolute position; cache
         required (built by init_cache). Paged decode (cache leaves built by
         ``serving.kvpool``) additionally takes ``block_table`` (B, N) and
-        allows ``pos`` to be a (B,) vector of per-sequence positions."""
+        allows ``pos`` to be a (B,) vector of per-sequence positions.
+        mode='chunk': one page-aligned prefill chunk against the paged
+        pool — tokens (1, page_size), ``pos`` the scalar absolute position
+        of the chunk's first token, ``block_table`` (1, N) covering every
+        page the sequence occupies through this chunk, ``dst_page`` the
+        scalar page id the chunk's K/V is scattered onto (the scratch page
+        when the chunk is prefix-shared). Attention-only patterns."""
         cfg = self.cfg
         emb = params["embed"]
         if embeddings is not None and tokens is not None:
@@ -238,6 +246,8 @@ class Model:
 
         if mode == "full":
             positions = jnp.arange(S, dtype=jnp.int32)
+        elif mode == "chunk":
+            positions = pos + jnp.arange(S, dtype=jnp.int32)
         else:
             positions = pos
 
@@ -249,7 +259,7 @@ class Model:
             bt = _layer_block_type(cfg, idx)
             x, nc, aux = self._apply_layer(params[name], bt, x, positions,
                                            mode, c, window, triangular,
-                                           block_table)
+                                           block_table, dst_page)
             if nc is not None:
                 new_cache[name] = nc
             return x, aux_total + aux
@@ -268,7 +278,7 @@ class Model:
                     c = cslice[f"slot{s}"] if cslice is not None else None
                     x, nc, a = self._apply_layer(
                         pslice[f"slot{s}"], bt, x, positions, mode, c, window,
-                        triangular, block_table)
+                        triangular, block_table, dst_page)
                     if nc is not None:
                         ncs[f"slot{s}"] = nc
                     aux = aux + a

@@ -84,6 +84,26 @@ def make_serve_step(model, window=None):
     return serve_step
 
 
+def make_chunked_prefill_step(model, window=None):
+    """One page-aligned prefill chunk against the paged KV pool: token
+    (1, C*page_size) ids for C consecutive whole pages (zero-padded past
+    the prompt), ``start`` scalar absolute position of the chunk's first
+    token, block_table (1, N) physical page ids covering every page the
+    sequence occupies through this chunk, ``dst_page`` (C,) page ids the
+    chunk's K/V lands on — an entry equal to the reserved scratch page
+    masks the write for a prefix-shared page that already holds identical
+    K/V. Returns the chunk's full logits (1, C*page_size, V) — callers
+    index the prompt-boundary row — plus the updated pool cache."""
+    def chunked_prefill_step(params, cache, token, start, block_table,
+                             dst_page):
+        logits, new_cache, _ = model.forward(
+            params, mode="chunk", tokens=token, cache=cache, pos=start,
+            window=window, block_table=block_table, dst_page=dst_page)
+        return logits, new_cache
+
+    return chunked_prefill_step
+
+
 def make_paged_serve_step(model, window=None):
     """One fused decode step for ALL sequences of a paged KV pool: token
     (B,1), pos (B,) per-sequence absolute positions, block_table (B,N)

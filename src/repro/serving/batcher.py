@@ -25,10 +25,17 @@ admission) dense row in stacked mode, against the pool's reserved scratch
 page in paged mode — the usual padded-batch tradeoff of wasted FLOPs on
 idle slots for a single fused dispatch.
 
-Paged admission prefills the FULL prompt (shared prefix pages currently
-save pool *memory* and page-write dispatches, not prefill FLOPs — a
-prefix-aware chunked prefill is the natural follow-up) and scatters only
-the non-shared chunks into fresh pages.
+Paged admission is **prefix-aware chunked prefill** by default
+(``prefill="chunked"``): prompts split into page-size chunks at admission,
+chunks whose pages already live in the pool at the request's exact trust
+tier are skipped outright (their K/V is identical by chain-hash
+construction; only the boundary logits of the LAST chunk matter, so that
+one always dispatches), and every batcher tick spends a bounded
+``prefill_token_budget`` on queued chunks — round-robin across slots —
+before running decode, so one long prompt can no longer freeze an
+island's decode slots for its whole length (Sarathi-style mixed
+scheduling). ``prefill="full"`` keeps the monolithic single-dispatch
+full-prompt admission as the A/B baseline.
 """
 from __future__ import annotations
 
@@ -41,9 +48,11 @@ import numpy as np
 
 from repro.data.tokenizer import ByteTokenizer
 from repro.models.model import effective_pattern, get_model
-from repro.models.steps import (make_paged_serve_step, make_prefill_step,
+from repro.models.steps import (make_chunked_prefill_step,
+                                make_paged_serve_step, make_prefill_step,
                                 make_serve_step)
-from repro.serving.kvpool import PagePool, prefix_chunk_hashes
+from repro.serving.kvpool import (SCRATCH_PAGE, PagePool,
+                                  prefix_chunk_hashes, resolve_chunk_page)
 from repro.serving.sampling import sample
 
 
@@ -59,6 +68,9 @@ class SlotState:
     tier: Optional[int] = None                  # paged mode: trust tier
     shared_pages: int = 0                       # paged mode: prefix hits
     prompt: str = ""                            # paged mode: for preemption
+    prompt_ids: list = field(default_factory=list)  # chunked prefill
+    chunks: list = field(default_factory=list)  # pending (j, hash, fill)
+    next_chunk: int = 0                         # first undispatched entry
 
 
 class _BatcherBase:
@@ -82,8 +94,19 @@ class _BatcherBase:
         self.finished: dict[int, Optional[str]] = {}
         self._next_id = 0
         self._prefill = jax.jit(make_prefill_step(self.model))
-        self.stats = {"ticks": 0, "prefills": 0, "decode_tokens": 0,
+        # "admissions" counts requests entering a slot; "prefill_dispatches"
+        # counts model prefill dispatches (1/admission monolithic, 1/chunk
+        # chunked). "prefills" is the legacy alias of prefill_dispatches.
+        self.stats = {"ticks": 0, "prefills": 0, "admissions": 0,
+                      "prefill_dispatches": 0, "decode_tokens": 0,
                       "decode_steps": 0, "queued_peak": 0}
+        # virtual work clock: advances by every token the model actually
+        # processes (prefill chunk fills + decode tokens). Deterministic
+        # proxy for dispatch wall time — TTFT measured against it exposes
+        # head-of-line blocking that virtual ticks cannot see.
+        self.work_clock = 0
+        # rid -> lifecycle record (submit/admit/first-token ticks & work)
+        self.request_log: dict[int, dict] = {}
 
     # --------------------------------------------------------- submission
     def submit(self, prompt: str, max_new_tokens=16,
@@ -96,7 +119,30 @@ class _BatcherBase:
         self.queue.append((rid, prompt, max_new_tokens, trust_tier))
         self.stats["queued_peak"] = max(self.stats["queued_peak"],
                                         len(self.queue))
+        self.request_log[rid] = {"submit_tick": self.stats["ticks"],
+                                 "submit_work": self.work_clock,
+                                 "tokens_skipped": 0}
         return rid
+
+    # ------------------------------------------------------ lifecycle notes
+    def _note_admission(self, rid, prompt_tokens):
+        self.stats["admissions"] += 1
+        rec = self.request_log.get(rid)
+        if rec is not None:
+            rec["admit_tick"] = self.stats["ticks"]
+            rec["prompt_tokens"] = prompt_tokens
+
+    def _note_prefill_dispatch(self, tokens):
+        self.stats["prefills"] += 1
+        self.stats["prefill_dispatches"] += 1
+        self.work_clock += tokens
+
+    def _note_first_token(self, rid):
+        rec = self.request_log.get(rid)
+        if rec is not None:
+            rec["first_token_tick"] = self.stats["ticks"]
+            rec["ttft_ticks"] = rec["first_token_tick"] - rec["submit_tick"]
+            rec["ttft_work"] = self.work_clock - rec["submit_work"]
 
     def busy(self) -> bool:
         return bool(self.queue) or any(s.active for s in self.slots)
@@ -119,6 +165,9 @@ class _BatcherBase:
     def _finish_slot(self, si):
         s = self.slots[si]
         self.finished[s.request_id] = self.tok.decode(s.generated)
+        rec = self.request_log.get(s.request_id)
+        if rec is not None:
+            rec["done_tick"] = self.stats["ticks"]
         self.slots[si] = SlotState()
 
 
@@ -162,7 +211,9 @@ class ContinuousBatcher(_BatcherBase):
             self.slots[si] = SlotState(active=True, request_id=rid,
                                        pos=len(ids), prompt_len=len(ids),
                                        generated=[tok0], max_new=max_new)
-            self.stats["prefills"] += 1
+            self._note_admission(rid, len(ids))
+            self._note_prefill_dispatch(len(ids))
+            self._note_first_token(rid)
 
     # --------------------------------------------------------------- tick
     def tick(self):
@@ -182,6 +233,7 @@ class ContinuousBatcher(_BatcherBase):
             self.params, self._cache, jnp.asarray(toks), jnp.asarray(poss))
         nxt = self._sample_next(logits[:, 0, :])
         self.stats["decode_steps"] += 1
+        self.work_clock += len(active)
         for si in active:
             s = self.slots[si]
             s.generated.append(int(nxt[si]))
@@ -195,17 +247,35 @@ class ContinuousBatcher(_BatcherBase):
 
 class PagedContinuousBatcher(_BatcherBase):
     """Paged-pool cache manager: page-granular allocation, trust-tiered
-    prefix sharing, copy-on-write appends, page free at completion."""
+    prefix sharing, copy-on-write appends, page free at completion.
+
+    ``prefill="chunked"`` (default) turns admission into a prefill QUEUE:
+    prompts split into page-size chunks, leading chunks whose pages are
+    already cached at the request's tier are skipped outright, and each
+    tick dispatches at most ``prefill_token_budget`` chunk tokens (round-
+    robin across slots) before decode. Chunk pages materialize lazily at
+    dispatch via a late-binding re-probe (``kvpool.resolve_chunk_page``),
+    so two same-tier requests admitted in the same tick still dedup their
+    common head; pages a slot's undispatched chunks will need are counted
+    in ``self.reserved`` and are off limits to decode-side alloc/COW, so
+    prefill itself never stalls mid-flight. Liveness stays with the
+    decode-stall preemption loop, whose victim pool includes mid-prefill
+    slots (their reservations can be what starves a lone decoder).
+    ``prefill="full"`` keeps the monolithic single-dispatch admission
+    (the A/B baseline)."""
 
     def __init__(self, cfg, params=None, num_slots=4, max_len=256,
                  seed=0, dtype="float32", temperature=0.0, page_size=16,
-                 num_pages=None, sharing=True):
+                 num_pages=None, sharing=True, prefill="chunked",
+                 prefill_token_budget=None):
         if not paged_supported(cfg):
             raise ValueError(
                 f"paged KV cache requires a full-history attention-only "
                 f"pattern, got {sorted(set(effective_pattern(cfg)))}"
                 f"{' with attn_window' if cfg.attn_window else ''} — use "
                 f"cache='stacked' for this config")
+        if prefill not in ("chunked", "full"):
+            raise ValueError(f"unknown prefill mode {prefill!r}")
         super().__init__(cfg, params, num_slots, max_len, seed, dtype,
                          temperature)
         self.page_size = page_size
@@ -219,12 +289,38 @@ class PagedContinuousBatcher(_BatcherBase):
                                      np.int32)
         self._decode_all = jax.jit(make_paged_serve_step(self.model),
                                    donate_argnums=(1,))
+        self.prefill_mode = prefill
+        self.prefill_token_budget = (prefill_token_budget
+                                     if prefill_token_budget is not None
+                                     else 4 * page_size)
+        # canonical dispatch width: one fused run never exceeds
+        # max(budget, one chunk) tokens (see _advance_prefill)
+        self._chunk_pages_canon = min(
+            max(1, -(-self.prefill_token_budget // page_size)),
+            self.pages_per_seq)
+        self._chunk_prefill = jax.jit(make_chunked_prefill_step(self.model),
+                                      donate_argnums=(1,))
+        # free pages spoken for by admitted-but-undispatched prefill chunks
+        self.reserved = 0
+        self._prefill_rr = 0     # rotating round-robin pointer (fairness)
+        self._enc_len: dict[int, int] = {}   # backlog length memo (by rid)
         self.blocked_last_tick = 0
         self.stats.update({"share_hits": 0, "cow_copies": 0, "stalls": 0,
-                           "preemptions": 0, "rejected_too_large": 0})
+                           "preemptions": 0, "rejected_too_large": 0,
+                           "prefix_tokens_skipped": 0,
+                           "prefill_chunk_tokens": 0})
 
     # ---------------------------------------------------------- admission
     def _admit(self):
+        if self.prefill_mode == "chunked":
+            self._admit_chunked()
+        else:
+            self._admit_full()
+
+    def _admit_full(self):
+        """Monolithic admission (the pre-chunking baseline): one blocking
+        full-prompt prefill dispatch per admitted request, scattered into
+        the pool in one fused whole-admission write."""
         for si, s in enumerate(self.slots):
             if s.active:
                 continue
@@ -294,8 +390,243 @@ class PagedContinuousBatcher(_BatcherBase):
                                        pages=pages, tier=tier,
                                        shared_pages=len(shared),
                                        prompt=prompt)
-            self.stats["prefills"] += 1
             self.stats["share_hits"] += len(shared)
+            self._note_admission(rid, len(ids))
+            self._note_prefill_dispatch(len(ids))
+            self._note_first_token(rid)
+
+    def _admit_chunked(self):
+        """Plan-only admission: split the prompt into page-size chunks,
+        attach to every leading chunk already cached at this exact trust
+        tier (those are skipped — their K/V is live pool state), and queue
+        the rest for budgeted dispatch by ``_prefill_tick``. No model
+        dispatch happens here, so admission can never block decode."""
+        for si, s in enumerate(self.slots):
+            if s.active:
+                continue
+            if not self.queue:
+                break
+            rid, prompt, max_new, tier = self.queue[0]
+            ids = self._encode(prompt, max_new)
+            chunks = prefix_chunk_hashes(ids, self.page_size)
+            # the admission probe's counter side effects are always rolled
+            # back: every chunk is accounted exactly ONCE at resolution —
+            # admission attaches via the explicit += below, everything
+            # else (late attach / fresh miss) by the dispatch-time
+            # re-probe — so retries and re-probes can't dilute hit_rate
+            hits0 = self.pool.stats["share_hits"]
+            miss0 = self.pool.stats["share_misses"]
+            shared = []
+            for chash, fill in chunks:
+                pid = self.pool.lookup_prefix(tier, chash, fill)
+                if pid is None:
+                    break
+                shared.append(pid)
+            self.pool.stats["share_hits"] = hits0
+            self.pool.stats["share_misses"] = miss0
+            n_fresh = len(chunks) - len(shared)
+            # same alone-fit rejection rule as the monolithic path
+            worst = -(-(len(ids) + max_new) // self.page_size)
+            if worst > self.pool.num_pages - 1:
+                self.queue.pop(0)
+                self._enc_len.pop(rid, None)
+                self.finished[rid] = None
+                self.stats["rejected_too_large"] += 1
+                continue
+            if self.pool.free_count() - self.reserved < n_fresh:
+                # pool exhausted once other slots' pending chunks are
+                # counted — leave the request queued (eviction pressure)
+                self.pool.stats["blocked"] += 1
+                self.blocked_last_tick += 1
+                break
+            self.queue.pop(0)
+            self._enc_len.pop(rid, None)
+            self.pool.stats["share_hits"] += len(shared)
+            for pid in shared:
+                self.pool.incref(pid)
+            self.reserved += n_fresh
+            row = np.zeros(self.pages_per_seq, np.int32)
+            row[:len(shared)] = shared
+            self.block_tables[si] = row
+            # the plan holds every chunk that must DISPATCH: fresh chunks,
+            # plus the last chunk even when shared (its boundary logits
+            # are the request's first token — it dispatches against the
+            # scratch page so the shared page is never rewritten)
+            plan = []
+            skipped = 0
+            for j, (chash, fill) in enumerate(chunks):
+                if j < len(shared) and j < len(chunks) - 1:
+                    skipped += fill
+                else:
+                    plan.append((j, chash, fill))
+            self.slots[si] = SlotState(active=True, request_id=rid, pos=0,
+                                       prompt_len=len(ids), generated=[],
+                                       max_new=max_new, pages=list(shared),
+                                       tier=tier, shared_pages=len(shared),
+                                       prompt=prompt, prompt_ids=ids,
+                                       chunks=plan, next_chunk=0)
+            self.stats["share_hits"] += len(shared)
+            self.stats["prefix_tokens_skipped"] += skipped
+            self._note_admission(rid, len(ids))
+            rec = self.request_log.get(rid)
+            if rec is not None:
+                rec["tokens_skipped"] = skipped
+
+    # ------------------------------------------------------ chunked prefill
+    def _prefill_tick(self):
+        """Sarathi-style budgeted prefill: spend up to
+        ``prefill_token_budget`` prompt tokens on queued chunks, round-
+        robin across slots so one long prompt cannot monopolize the tick
+        (prefix-skipped chunks are free and don't consume budget). The
+        round-robin pointer ROTATES — the next tick resumes after the last
+        slot served — so even a budget of one chunk per tick cannot starve
+        a short prompt sitting behind a long one."""
+        budget = self.prefill_token_budget
+        n = self.num_slots
+        start = self._prefill_rr
+        progress = True
+        while budget > 0 and progress:
+            progress = False
+            for k in range(n):
+                if budget <= 0:
+                    break
+                si = (start + k) % n
+                s = self.slots[si]
+                if not (s.active and s.next_chunk < len(s.chunks)):
+                    continue
+                budget -= self._advance_prefill(si, budget)
+                self._prefill_rr = (si + 1) % n
+                progress = True
+
+    def _advance_prefill(self, si, budget) -> int:
+        """Resolve plan entries for slot ``si`` until one dispatch happens:
+        late-attached chunks are skipped for free, and CONSECUTIVE fresh
+        chunks are fused into a single dispatch of up to ``budget`` tokens
+        (at least one chunk always dispatches, so progress is guaranteed
+        even when budget < page_size). Completing the plan emits the first
+        token. Returns the tokens dispatched."""
+        s = self.slots[si]
+        group = []                    # (chunk_idx, chash, fill, dst) run
+        gtok = 0
+        while s.next_chunk < len(s.chunks):
+            j, chash, fill = s.chunks[s.next_chunk]
+            last = s.next_chunk == len(s.chunks) - 1
+            if group and (j != group[-1][0] + 1
+                          or gtok + fill > max(budget, fill)):
+                break                 # attach broke the run, or budget
+            if len(s.pages) > j:
+                dst = SCRATCH_PAGE   # admission-shared last chunk: the real
+            else:                    # page already holds identical K/V
+                pid, attached = resolve_chunk_page(self.pool, s.tier,
+                                                   chash, fill)
+                assert pid is not None, "reserved prefill page missing"
+                self.reserved -= 1
+                s.pages.append(pid)
+                self.block_tables[si, j] = pid
+                if attached:
+                    s.shared_pages += 1
+                    self.stats["share_hits"] += 1
+                    if not last:
+                        # another request finished this exact same-tier
+                        # prefix chunk since admission: skip the FLOPs
+                        s.next_chunk += 1
+                        self.stats["prefix_tokens_skipped"] += fill
+                        rec = self.request_log.get(s.request_id)
+                        if rec is not None:
+                            rec["tokens_skipped"] += fill
+                        continue
+                    dst = SCRATCH_PAGE
+                else:
+                    dst = pid
+            group.append((j, chash, fill, dst))
+            gtok += fill
+            s.next_chunk += 1
+            if last or gtok >= budget:
+                break
+        if not group:                 # plan drained purely by skips —
+            return 0                  # impossible (last always dispatches)
+        logits = self._dispatch_chunks(si, group)
+        for j, chash, fill, dst in group:
+            if dst != SCRATCH_PAGE:
+                # register AFTER the write so an index hit is always
+                # readable (late attaches depend on this ordering)
+                self.pool.register_prefix(dst, s.tier, chash, fill)
+        if s.next_chunk == len(s.chunks):
+            # prompt complete: the boundary logits are the first token
+            off = (s.prompt_len - 1) - group[0][0] * self.page_size
+            tok0 = int(jnp.argmax(logits[0, off]))
+            s.pos = s.prompt_len
+            s.generated = [tok0]
+            self._note_first_token(s.request_id)
+        return gtok
+
+    def _dispatch_chunks(self, si, group):
+        """ONE model dispatch for a run of consecutive chunks: gathers
+        context through the block table, scatters fresh K/V onto the run's
+        pages (scratch-masked entries skip shared pages and the padding
+        past short runs).
+
+        Dispatch shapes are BUCKETED — the run is padded to the next
+        power-of-two page count (capped by the budget) and the block table
+        trimmed to the next power-of-two width covering the run's last
+        page — so however runs land, the chunked-prefill path compiles
+        O(log^2) shapes per batcher (the same bucketing trick the routing
+        kernel uses for pool sizes), while per-chunk gather cost tracks
+        the context actually attended, not table capacity (the decode
+        path's n_live trim, bucketed). Padding rows write only the scratch
+        page and causal masking keeps every real row away from their
+        garbage."""
+        s = self.slots[si]
+        ps = self.page_size
+        start = group[0][0] * ps
+        c = min(1 << (len(group) - 1).bit_length(), self._chunk_pages_canon)
+        w = min(1 << group[-1][0].bit_length(), self.pages_per_seq)
+        toks = np.zeros((1, c * ps), np.int32)
+        dst = np.zeros(c, np.int32)                         # pad -> scratch
+        fills = 0
+        for n, (j, _h, fill, d) in enumerate(group):
+            toks[0, n * ps:n * ps + fill] = s.prompt_ids[j * ps:j * ps + fill]
+            dst[n] = d
+            fills += fill
+        logits, self.pool.pages = self._chunk_prefill(
+            self.params, self.pool.pages, jnp.asarray(toks),
+            jnp.int32(start), jnp.asarray(self.block_tables[si:si + 1, :w]),
+            jnp.asarray(dst))
+        self.stats["prefill_chunk_tokens"] += fills
+        self._note_prefill_dispatch(fills)
+        return logits
+
+    def prefill_backlog_tokens(self) -> int:
+        """Prompt tokens admitted or queued but not yet prefilled — the
+        head-of-line signal TIDE folds into the island's queueing-latency
+        term (``report_pool_pressure``). Queued prompts' encoded lengths
+        are memoized per request id (the orchestrator polls this every
+        tick for every island)."""
+        pending = sum(fill for s in self.slots if s.active
+                      for (_j, _h, fill) in s.chunks[s.next_chunk:])
+        queued = 0
+        for rid, p, mn, _t in self.queue:
+            ln = self._enc_len.get(rid)
+            if ln is None:
+                ln = self._enc_len[rid] = len(self._encode(p, mn))
+            queued += ln
+        return pending + queued
+
+    # ------------------------------------------------------------- decode
+    def _decode_alloc(self, tier):
+        """Decode-side page alloc: free pages reserved for admitted-but-
+        undispatched prefill chunks are off limits, so prefill can never
+        stall mid-flight (its pages are guaranteed by admission)."""
+        if self.pool.free_count() <= self.reserved:
+            self.pool.stats["blocked"] += 1
+            return None
+        return self.pool.alloc(tier)
+
+    def _decode_cow(self, pid, tier):
+        if self.pool.free_count() <= self.reserved:
+            self.pool.stats["blocked"] += 1
+            return None
+        return self.pool.cow(pid, tier)
 
     def _prepare_write_page(self, si) -> bool:
         """Make slot ``si``'s next write position backed by a private page:
@@ -304,14 +635,14 @@ class PagedContinuousBatcher(_BatcherBase):
         s = self.slots[si]
         wp = s.pos // self.page_size
         if wp >= len(s.pages):
-            pid = self.pool.alloc(s.tier)
+            pid = self._decode_alloc(s.tier)
             if pid is None:
                 return False
             s.pages.append(pid)
             self.block_tables[si, wp] = pid
         pid = s.pages[wp]
         if self.pool.refcount[pid] > 1:
-            new = self.pool.cow(pid, s.tier)
+            new = self._decode_cow(pid, s.tier)
             if new is None:
                 return False
             s.pages[wp] = new
@@ -321,12 +652,16 @@ class PagedContinuousBatcher(_BatcherBase):
 
     # --------------------------------------------------------------- tick
     def tick(self):
-        """Admit from queue (attaching to cached same-tier prefixes), then
-        ONE fused paged decode step for all slots."""
+        """Admit from queue (attaching to cached same-tier prefixes),
+        spend the prefill token budget on queued chunks, then ONE fused
+        paged decode step for every slot whose prompt is fully prefilled."""
         self.blocked_last_tick = 0
         self._admit()
         self.stats["ticks"] += 1
-        active = [si for si, s in enumerate(self.slots) if s.active]
+        if self.prefill_mode == "chunked":
+            self._prefill_tick()
+        active = [si for si, s in enumerate(self.slots)
+                  if s.active and s.next_chunk >= len(s.chunks)]
         if not active:
             return
         ready, stalled = [], []
@@ -338,16 +673,31 @@ class PagedContinuousBatcher(_BatcherBase):
                 self.stats["stalls"] += 1
                 self.blocked_last_tick += 1
         while not ready and stalled:
-            # EVERY active slot is blocked on page exhaustion: without
-            # intervention no slot can decode, finish, or free — a
+            # EVERY decode-ready slot is blocked on page exhaustion:
+            # without intervention no slot can decode, finish, or free — a
             # permanent deadlock on oversubscribed pools. Preempt the
-            # youngest stalled sequence (fewest tokens to recompute):
+            # least-invested sequence (fewest tokens to recompute):
             # release its pages, requeue it, and hand the freed pages to
             # the survivors IN THIS TICK (re-admitting first would just
-            # re-create the same stall next tick).
-            victim = min(stalled, key=lambda si: len(self.slots[si].generated))
-            stalled.remove(victim)
+            # re-create the same stall next tick). Mid-prefill slots are
+            # victim candidates too: their reserved-but-undispatched pages
+            # can be what starves a lone decoder, and preempting that
+            # decoder instead would only swap the roles and repeat the
+            # stall after its re-admission — a livelock, not progress.
+            prefilling = [si for si, s in enumerate(self.slots)
+                          if s.active and s.next_chunk < len(s.chunks)]
+
+            def invested(si):
+                s = self.slots[si]
+                return len(s.pages) * self.page_size + len(s.generated)
+
+            victim = min(stalled + prefilling, key=invested)
+            if victim in stalled:
+                stalled.remove(victim)
             s = self.slots[victim]
+            # release the reservations its undispatched fresh chunks hold
+            self.reserved -= sum(1 for (j, _h, _f) in s.chunks[s.next_chunk:]
+                                 if j >= len(s.pages))
             for pid in s.pages:
                 self.pool.decref(pid)
             self.block_tables[victim] = 0
@@ -380,6 +730,7 @@ class PagedContinuousBatcher(_BatcherBase):
             jnp.asarray(poss), jnp.asarray(bt[:, :n_live]))
         nxt = self._sample_next(logits)
         self.stats["decode_steps"] += 1
+        self.work_clock += len(ready)
         for si in ready:
             s = self.slots[si]
             s.generated.append(int(nxt[si]))
@@ -408,8 +759,8 @@ def make_batcher(cfg, cache: str = "auto", **kw):
     if cache == "paged":
         return PagedContinuousBatcher(cfg, **kw)
     if cache == "stacked":
-        kw.pop("page_size", None)
-        kw.pop("num_pages", None)
-        kw.pop("sharing", None)
+        for k in ("page_size", "num_pages", "sharing", "prefill",
+                  "prefill_token_budget"):
+            kw.pop(k, None)
         return ContinuousBatcher(cfg, **kw)
     raise ValueError(f"unknown cache manager {cache!r}")

@@ -242,7 +242,8 @@ class TickOrchestrator:
         self._util_sum: dict[str, float] = {}
         self._util_n: dict[str, int] = {}
         self.tick_stats = {"ticks": 0, "route_calls": 0, "routed": 0,
-                           "decode_ticks": 0, "pool_peak": 0}
+                           "decode_ticks": 0, "pool_peak": 0,
+                           "admissions": 0, "prefill_dispatches": 0}
 
     # --------------------------------------------------------- submission
     def submit(self, req: Request, max_new_tokens=12) -> int:
@@ -435,9 +436,25 @@ class TickOrchestrator:
                     # fail closed: no prefix sharing on a crashed-TIDE
                     # island (capacity/trust signals can't be validated)
                     kv_pool.disable_sharing()
+                backlog_fn = getattr(b, "prefill_backlog_tokens", None)
+                backlog = backlog_fn() if backlog_fn is not None else 0
+                # prefill backlog joins pool occupancy/blocked admissions
+                # in the island's pressure signal: the batched router
+                # scores prefill-saturated islands as slower to respond
                 waves.tide.report_pool_pressure(
-                    iid, kv_pool.occupancy(), blocked=blocked)
-                waves.lighthouse.report_pool(iid, kv_pool.telemetry())
+                    iid, kv_pool.occupancy(), blocked=blocked,
+                    prefill_backlog=backlog)
+                waves.lighthouse.report_pool(iid, dict(
+                    kv_pool.telemetry(), prefill_backlog=backlog,
+                    prefix_tokens_skipped=b.stats.get(
+                        "prefix_tokens_skipped", 0)))
+        # admission vs prefill-dispatch counts (chunked prefill makes the
+        # two diverge: one admission may dispatch many chunks — or none)
+        self.tick_stats["admissions"] = sum(
+            b.stats.get("admissions", 0) for b in self.batchers.values())
+        self.tick_stats["prefill_dispatches"] = sum(
+            b.stats.get("prefill_dispatches", 0)
+            for b in self.batchers.values())
         # advance virtual time
         waves.tide.advance(self.tick_interval_s)
         waves.lighthouse.advance(self.tick_interval_s)
@@ -499,13 +516,16 @@ class TickOrchestrator:
         pools = self.waves.lighthouse.pool_telemetry()
         if pools:
             s["kv_pools"] = pools
+            s["prefill_backlog"] = \
+                self.waves.lighthouse.mesh_prefill_backlog()
         return s
 
 
 def build_island_batchers(cfg, registry, cache="auto", params=None,
                           slots_per_capacity_unit=2.0, max_len=96,
                           page_size=16, pool_headroom=1.0, seed=0,
-                          temperature=0.0):
+                          temperature=0.0, prefill="chunked",
+                          prefill_token_budget=None):
     """Per-SHORE-island continuous batchers with KV pools sized from each
     island's declared ``capacity_units``.
 
@@ -532,7 +552,8 @@ def build_island_batchers(cfg, registry, cache="auto", params=None,
         b = make_batcher(
             cfg, cache=cache, params=params, num_slots=slots,
             max_len=max_len, seed=seed, temperature=temperature,
-            page_size=page_size,
+            page_size=page_size, prefill=prefill,
+            prefill_token_budget=prefill_token_budget,
             num_pages=max(2, int(slots * pages_per_seq
                                  * pool_headroom)) + 1)
         if params is None:

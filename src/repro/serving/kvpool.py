@@ -78,6 +78,27 @@ def prefix_chunk_hashes(token_ids, page_size: int):
     return out
 
 
+def resolve_chunk_page(pool: "PagePool", tier: Optional[int], chash: str,
+                       fill: int):
+    """Late-binding prefix resolution for one planned prefill chunk.
+
+    Chunked admission plans chunks without dispatching them, so a chunk
+    another request registered *after* this request was admitted (it was
+    mid-prefill at admission time) is re-probed here, at dispatch time:
+    attach to the registered page (skip the FLOPs) or take a fresh page.
+    The attach path goes through ``lookup_prefix``, so every fail-closed
+    rule — tier mismatch, untiered request, sharing disabled — applies
+    identically; registration-after-write (the batcher registers a page
+    only once its K/V is in the pool) guarantees any hit is readable.
+    Returns ``(page_id_or_None, attached)``.
+    """
+    pid = pool.lookup_prefix(tier, chash, fill)
+    if pid is not None:
+        pool.incref(pid)
+        return pid, True
+    return pool.alloc(tier), False
+
+
 # -------------------------------------------------------------- device ops
 
 def _leaf_page_axis(leaf) -> int:

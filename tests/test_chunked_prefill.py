@@ -1,0 +1,300 @@
+"""Prefix-aware chunked prefill: step-level parity vs the full-prompt
+prefill oracle (boundary logits + written K/V pages), prefix-skip
+correctness under COW, fail-closed tier isolation when chunks are skipped,
+budgeted prefill/decode interleaving, and the backlog -> routing feedback."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_shim import given, settings, st
+
+from repro.configs.base import get_config
+from repro.models.model import get_model
+from repro.models.steps import make_chunked_prefill_step
+from repro.serving.kvpool import (SCRATCH_PAGE, PagePool,
+                                  prefix_chunk_hashes, resolve_chunk_page)
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("smollm-135m").reduced()
+
+
+@pytest.fixture(scope="module")
+def model_and_params(cfg):
+    model = get_model(cfg)
+    return model, model.init(jax.random.PRNGKey(0), "float32")
+
+
+# ------------------------------------------------------- step-level parity
+
+def test_chunk_step_matches_full_prefill(cfg, model_and_params):
+    """Driving a prompt chunk-by-chunk through make_chunked_prefill_step
+    reproduces the monolithic full-prompt prefill: every prompt position's
+    logits AND every written K/V page row agree to <= 1e-4 (f32)."""
+    model, params = model_and_params
+    ps, max_len = 16, 64
+    pool = PagePool(model, max_len, ps, num_pages=10, dtype=jnp.float32)
+    ids = list(np.random.RandomState(0).randint(3, 200, size=41))
+    n_chunks = -(-len(ids) // ps)
+
+    toks = jnp.asarray(np.asarray(ids, np.int32)[None])
+    cache = model.init_cache(1, max_len, dtype=jnp.float32)
+    logits_full, dense, _ = model.forward(params, mode="full", tokens=toks,
+                                          cache=cache)
+    full = np.asarray(logits_full[0])
+
+    step = jax.jit(make_chunked_prefill_step(model), donate_argnums=(1,))
+    pages = [1, 2, 3]
+    bt = np.zeros((1, n_chunks), np.int32)
+    fills = []
+    for j in range(n_chunks):
+        chunk = ids[j * ps:(j + 1) * ps]
+        fills.append(len(chunk))
+        t = np.zeros((1, ps), np.int32)
+        t[0, :len(chunk)] = chunk
+        bt[0, j] = pages[j]
+        lg, pool.pages = step(params, pool.pages, jnp.asarray(t),
+                              jnp.int32(j * ps), jnp.asarray(bt[:, :j + 1]),
+                              jnp.asarray([pages[j]], jnp.int32))
+        np.testing.assert_allclose(
+            np.asarray(lg)[0, :fills[j]],
+            full[j * ps:j * ps + fills[j]], rtol=1e-4, atol=1e-4)
+
+    # written K/V pages == the dense prefill cache, chunk by chunk
+    for d, p in zip(jax.tree.leaves(dense), jax.tree.leaves(pool.pages)):
+        if d.ndim == 4:          # (1, S, Hkv, D) vs (P, ps, Hkv, D)
+            chunks = np.asarray(d[0]).reshape(-1, ps, *d.shape[2:])
+            for j in range(n_chunks):
+                np.testing.assert_allclose(
+                    np.asarray(p[pages[j]])[:fills[j]],
+                    chunks[j][:fills[j]], rtol=1e-4, atol=1e-4)
+        else:                    # (G, 1, S, ...) vs (G, P, ps, ...)
+            chunks = np.asarray(d[:, 0]).reshape(d.shape[0], -1, ps,
+                                                 *d.shape[3:])
+            for j in range(n_chunks):
+                np.testing.assert_allclose(
+                    np.asarray(p[:, pages[j], :fills[j]]),
+                    chunks[:, j, :fills[j]], rtol=1e-4, atol=1e-4)
+
+
+def test_chunk_step_scratch_dst_skips_write(cfg, model_and_params):
+    """dst_page == scratch (a prefix-shared chunk) must leave every real
+    pool page untouched while still producing the chunk's logits."""
+    model, params = model_and_params
+    ps = 16
+    pool = PagePool(model, 64, ps, num_pages=6, dtype=jnp.float32)
+    ids = list(np.random.RandomState(1).randint(3, 200, size=16))
+    step = jax.jit(make_chunked_prefill_step(model))
+    t = jnp.asarray(np.asarray(ids, np.int32)[None])
+    bt = jnp.asarray(np.array([[1]], np.int32))
+    lg1, pages1 = step(params, pool.pages, t, jnp.int32(0), bt,
+                       jnp.asarray([1], jnp.int32))
+    # replay against the already-written page, masked to scratch
+    lg2, pages2 = step(params, pages1, t, jnp.int32(0), bt,
+                       jnp.asarray([SCRATCH_PAGE], jnp.int32))
+    np.testing.assert_allclose(np.asarray(lg1), np.asarray(lg2),
+                               rtol=1e-5, atol=1e-5)
+    for a, b in zip(jax.tree.leaves(pages1), jax.tree.leaves(pages2)):
+        pa = np.asarray(a[1] if a.ndim == 4 else a[:, 1])
+        pb = np.asarray(b[1] if b.ndim == 4 else b[:, 1])
+        np.testing.assert_array_equal(pa, pb)
+
+
+# --------------------------------------------------- batcher-level parity
+
+def test_chunked_batcher_matches_stacked_oracle(cfg):
+    """Chunked, budget-throttled paged admission decodes exactly what the
+    dense stacked cache decodes for a mixed-length batch (tiny budget so
+    prefill genuinely spans ticks and interleaves with decode)."""
+    from repro.serving.batcher import ContinuousBatcher, \
+        PagedContinuousBatcher
+    prompts = ["short", "a somewhat longer request that spans pages",
+               "mid-size prompt here", "x" * 40]
+    b1 = ContinuousBatcher(cfg, num_slots=2, max_len=64)
+    b2 = PagedContinuousBatcher(cfg, num_slots=2, max_len=64, page_size=16,
+                                prefill="chunked", prefill_token_budget=16)
+    for p in prompts:
+        b1.submit(p, max_new_tokens=4)
+        b2.submit(p, max_new_tokens=4, trust_tier=2)
+    assert b1.run_until_done() == b2.run_until_done()
+    assert b2.stats["prefill_dispatches"] > b2.stats["admissions"]
+    assert b2.pool.in_use() == 0 and b2.reserved == 0 and b2.pool.check()
+
+
+def test_prefix_skip_under_cow_matches_oracle(cfg):
+    """Identical same-tier prompts: the second admission skips the shared
+    head chunks outright (prefix_tokens_skipped > 0), the first decode
+    write COWs the shared tail page, and both sequences still decode
+    exactly what the dense oracle decodes."""
+    from repro.serving.batcher import ContinuousBatcher, \
+        PagedContinuousBatcher
+    prompt = "identical prompt shared by two live sequences"
+    b1 = ContinuousBatcher(cfg, num_slots=2, max_len=64)
+    b2 = PagedContinuousBatcher(cfg, num_slots=2, max_len=64, page_size=16)
+    for _ in range(2):
+        b1.submit(prompt, max_new_tokens=5)
+        b2.submit(prompt, max_new_tokens=5, trust_tier=1)
+    assert b1.run_until_done() == b2.run_until_done()
+    assert b2.stats["prefix_tokens_skipped"] >= 32    # two 16-token chunks
+    assert b2.pool.stats["cow_copies"] >= 1
+    # skipping saved real dispatches: both prompts' tokens minus the skips
+    total = sum(r["prompt_tokens"] for r in b2.request_log.values())
+    assert b2.stats["prefill_chunk_tokens"] == \
+        total - b2.stats["prefix_tokens_skipped"]
+    assert b2.pool.in_use() == 0 and b2.pool.check()
+
+
+def test_ttft_improves_for_short_prompt_behind_long(cfg):
+    """Sarathi-style interleaving: a short prompt submitted behind a long
+    one gets its first token after LESS model work than under monolithic
+    full-prompt admission (work_clock counts every dispatched token)."""
+    from repro.serving.batcher import PagedContinuousBatcher
+
+    def ttft_work(prefill):
+        b = PagedContinuousBatcher(cfg, num_slots=2, max_len=96,
+                                   page_size=16, prefill=prefill,
+                                   prefill_token_budget=16)
+        b.submit("L" * 70, max_new_tokens=4, trust_tier=2)     # 5 pages
+        rid = b.submit("hi", max_new_tokens=4, trust_tier=2)   # 1 page
+        b.run_until_done()
+        return b.request_log[rid]["ttft_work"]
+
+    assert ttft_work("chunked") < ttft_work("full")
+
+
+# --------------------------------------------- tier isolation (fail closed)
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 3),            # tier idx (3=None)
+                          st.integers(0, 2),            # prompt family
+                          st.integers(1, 40)),          # prompt length
+                min_size=1, max_size=12),
+       st.integers(4, 16))
+def test_chunk_resolution_never_crosses_tiers(reqs, ps):
+    """The late-binding dispatch-time re-probe (resolve_chunk_page) obeys
+    every fail-closed rule: a chunk only ever attaches to a page holding
+    the SAME chain-hashed prefix registered at the SAME tier; untiered
+    requests never attach; registered pages' tier tags never lie."""
+    pool = PagePool(num_pages=256, page_size=ps, max_len=ps * 16)
+    families = {0: [7] * 64, 1: [7] * 32 + [9] * 32, 2: [11] * 64}
+    for tier_idx, fam, ln in reqs:
+        tier = None if tier_idx == 3 else 1 + tier_idx
+        ids = families[fam][:ln]
+        for chash, fill in prefix_chunk_hashes(ids, ps):
+            pid, attached = resolve_chunk_page(pool, tier, chash, fill)
+            if pid is None:
+                break                       # exhausted: nothing attached
+            if attached:
+                # attach == the page was registered for this exact
+                # (tier, prefix); untiered lookups must never attach
+                assert tier is not None
+                assert pool._meta[pid].tier == tier
+                assert pool._meta[pid].key == (tier, chash, fill)
+            else:
+                pool.register_prefix(pid, tier, chash, fill)
+        pool.check()
+    # cross-check the index end-state: every entry tier-tags its page
+    for (tier, chash, fill), pid in pool._prefix_index.items():
+        assert pool._meta[pid].tier == tier
+
+
+def test_distinct_tiers_skip_nothing_end_to_end(cfg):
+    """Identical prompts at three distinct tiers + one untiered request:
+    zero chunks skipped, zero share hits, outputs equal the dense oracle —
+    tier isolation stays fail-closed through the whole chunked path."""
+    from repro.serving.batcher import ContinuousBatcher, \
+        PagedContinuousBatcher
+    prompt = "the same sensitive prompt at every trust tier"
+    b1 = ContinuousBatcher(cfg, num_slots=4, max_len=64)
+    b2 = PagedContinuousBatcher(cfg, num_slots=4, max_len=64, page_size=16)
+    for tier in (1, 2, 3, None):
+        b1.submit(prompt, max_new_tokens=4)
+        b2.submit(prompt, max_new_tokens=4, trust_tier=tier)
+    assert b1.run_until_done() == b2.run_until_done()
+    assert b2.stats["prefix_tokens_skipped"] == 0
+    assert b2.stats["share_hits"] == 0
+    assert b2.pool.in_use() == 0 and b2.pool.check()
+
+
+def test_reserved_pages_cannot_livelock_lone_decoder(cfg):
+    """Regression: with a tiny budget on an oversubscribed pool, one slot
+    finishes prefill while the other's RESERVED pages starve its first
+    decode write. Preempting the stalled decoder itself would just swap
+    the two roles forever (livelock); the victim pool must include
+    mid-prefill slots so the least-invested sequence is evicted and
+    somebody finishes."""
+    from repro.serving.batcher import PagedContinuousBatcher
+    b = PagedContinuousBatcher(cfg, num_slots=2, max_len=64, page_size=16,
+                               num_pages=5, sharing=False,
+                               prefill="chunked", prefill_token_budget=16)
+    rids = [b.submit("a" * 30 + str(i), max_new_tokens=4, trust_tier=2)
+            for i in range(2)]
+    done = b.run_until_done(max_ticks=200)
+    assert sorted(done) == sorted(rids)
+    assert b.stats["ticks"] < 200, "spun to the tick cap (livelock)"
+    assert b.stats["preemptions"] >= 1
+    assert b.pool.in_use() == 0 and b.reserved == 0 and b.pool.check()
+
+
+# ------------------------------------------------- scheduling + telemetry
+
+def test_prefill_budget_bounds_tokens_per_tick(cfg):
+    """No tick may dispatch more prefill tokens than the budget (plus one
+    overshooting chunk), and decode proceeds while a long prompt is still
+    mid-prefill (the head-of-line fix)."""
+    from repro.serving.batcher import PagedContinuousBatcher
+    b = PagedContinuousBatcher(cfg, num_slots=2, max_len=96, page_size=16,
+                               prefill_token_budget=16)
+    b.submit("tiny", max_new_tokens=6, trust_tier=2)
+    b.submit("Q" * 75, max_new_tokens=4, trust_tier=2)      # 5 chunks
+    per_tick = []
+    last = 0
+    while b.busy() and b.stats["ticks"] < 100:
+        decoded_before = b.stats["decode_steps"]
+        b.tick()
+        per_tick.append((b.stats["prefill_chunk_tokens"] - last,
+                         b.stats["decode_steps"] - decoded_before))
+        last = b.stats["prefill_chunk_tokens"]
+    assert max(t for t, _ in per_tick) <= 16 + 16     # budget + overshoot
+    # some tick both prefilled the long prompt AND decoded the short one
+    assert any(t > 0 and d > 0 for t, d in per_tick)
+
+
+def test_orchestrator_surfaces_prefill_split_and_backlog(cfg, stack):
+    """tick_stats distinguishes admissions from prefill dispatches, and
+    the prefill backlog reaches TIDE's queueing term + LIGHTHOUSE."""
+    from repro.core.tide import PREFILL_BACKLOG_TOKENS_PER_UNIT
+    from repro.core.workload import healthcare_workload
+    from repro.serving.engine import TickOrchestrator, build_island_batchers
+    reg, mist, tide, lh, waves = stack
+    bats = build_island_batchers(cfg, reg, cache="paged", max_len=64,
+                                 slots_per_capacity_unit=1.0,
+                                 prefill_token_budget=8)   # force backlog
+    orch = TickOrchestrator(waves, reg, bats)
+    for req, _ in healthcare_workload(8, seed=3):
+        orch.submit(req, max_new_tokens=3)
+    saw_backlog = False
+    while orch.busy() and orch.tick_stats["ticks"] < 500:
+        orch.tick()
+        pools = lh.pool_telemetry()
+        if any(t.get("prefill_backlog", 0) > 0 for t in pools.values()):
+            saw_backlog = True
+    assert saw_backlog, "tiny budget never produced a visible backlog"
+    s = orch.stats()
+    assert s["admissions"] >= 1
+    assert s["prefill_dispatches"] > s["admissions"]   # chunked admission
+    assert s["prefill_backlog"] == 0                   # drained at the end
+    assert lh.mesh_prefill_backlog() == 0
+    assert all("prefix_tokens_skipped" in t
+               for t in lh.pool_telemetry().values())
+    # direct TIDE check: backlog inflates inflight (queueing latency)
+    tide2_island = reg.all()[0].island_id
+    before = tide._st(tide2_island).inflight
+    tide.report_pool_pressure(tide2_island, 0.0, blocked=0,
+                              prefill_backlog=640)
+    expected = (640 / PREFILL_BACKLOG_TOKENS_PER_UNIT
+                / max(reg.get(tide2_island).capacity_units, 1e-6))
+    assert tide._st(tide2_island).inflight >= min(expected, before) \
+        and tide._st(tide2_island).inflight >= expected - 1e-9

@@ -5,6 +5,7 @@ import numpy as np
 import pytest
 
 from repro.kernels import ops, ref
+from repro.kernels.chunked_prefill import chunked_prefill_attention
 from repro.kernels.decode_attention import decode_attention
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.paged_attention import paged_decode_attention
@@ -108,6 +109,93 @@ def test_paged_scratch_pages_fully_masked():
     np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=0)
 
 
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,Hkv,P,ps,N,T,bq,starts", [
+    (1, 4, 2, 8, 16, 4, 16, 16, (16,)),       # one-page chunk mid-sequence
+    (2, 8, 2, 12, 16, 6, 32, 16, (0, 48)),    # 2-page chunk, q-tile loop
+    (1, 4, 4, 6, 8, 6, 16, 8, (24,)),         # small pages, MHA
+    (2, 16, 4, 16, 16, 8, 64, 32, (32, 0)),   # long chunk, ragged starts
+])
+def test_chunked_prefill_attention_sweep(B, H, Hkv, P, ps, N, T, bq,
+                                         starts, dtype):
+    """Chunked-prefill kernel vs oracle across chunk lengths, q tiles and
+    per-sequence start offsets; f32 must match to <= 1e-4 max abs error."""
+    q = jax.random.normal(KEY, (B, T, H, D := 32), dtype)
+    kp = jax.random.normal(jax.random.PRNGKey(1), (P, ps, Hkv, D), dtype)
+    vp = jax.random.normal(jax.random.PRNGKey(2), (P, ps, Hkv, D), dtype)
+    bt = jax.random.randint(jax.random.PRNGKey(3), (B, N), 0, P)
+    sp = jnp.asarray(starts, jnp.int32)
+    o = chunked_prefill_attention(q, kp, vp, bt, sp, block_q=bq)
+    o_ref = ref.chunked_prefill_attention(q, kp, vp, bt, sp, D ** -0.5)
+    tol = _tol(dtype) if dtype == jnp.bfloat16 else \
+        dict(rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(o_ref, np.float32), **tol)
+
+
+def test_chunked_prefill_replays_monolithic_flash():
+    """Running a prompt through chunk-sized pieces against a contiguous
+    block table reproduces the monolithic causal flash prefill exactly:
+    chunk t's rows equal rows [t*ps, (t+1)*ps) of full attention."""
+    B, H, Hkv, D, ps, N = 1, 4, 2, 32, 16, 4
+    S = N * ps
+    q = jax.random.normal(KEY, (B, S, H, D), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, Hkv, D))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, Hkv, D))
+    kp = k[0].reshape(N, ps, Hkv, D)
+    vp = v[0].reshape(N, ps, Hkv, D)
+    bt = jnp.arange(N)[None]
+    # monolithic oracle in kernel layout (BH, S, D)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * Hkv, S, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * Hkv, S, D)
+    o_full = ref.flash_attention(qf, kf, vf, D ** -0.5, causal=True)
+    o_full = o_full.reshape(B, H, S, D).transpose(0, 2, 1, 3)
+    for t in range(N):
+        o_chunk = chunked_prefill_attention(
+            q[:, t * ps:(t + 1) * ps], kp, vp, bt[:, :t + 1],
+            jnp.array([t * ps], jnp.int32))
+        np.testing.assert_allclose(np.asarray(o_chunk),
+                                   np.asarray(o_full[:, t * ps:(t + 1) * ps]),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_chunked_prefill_future_pages_fully_masked():
+    """Block-table entries past the chunk's causal horizon (scratch refs)
+    must never reach the output, whatever garbage lives there."""
+    B, H, Hkv, D, P, ps, N = 1, 4, 2, 32, 6, 16, 4
+    q = jax.random.normal(KEY, (B, ps, H, D), jnp.float32)
+    kp = jax.random.normal(jax.random.PRNGKey(1), (P, ps, Hkv, D))
+    vp = jax.random.normal(jax.random.PRNGKey(2), (P, ps, Hkv, D))
+    bt = jnp.array([[3, 4, 0, 0]])         # chunk on page 4, future = 0
+    start = jnp.array([ps], jnp.int32)
+    o1 = chunked_prefill_attention(q, kp, vp, bt, start)
+    kp2 = kp.at[0].set(1e4)                # poison the scratch page
+    vp2 = vp.at[0].set(-1e4)
+    o2 = chunked_prefill_attention(q, kp2, vp2, bt, start)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=0)
+
+
+@pytest.mark.tpu
+def test_chunked_prefill_attention_compiles_native_tpu():
+    """Native (non-interpret) Mosaic lowering of the chunked-prefill
+    kernel — deselected on CPU CI via ``-m "not tpu"``."""
+    B, H, Hkv, D, P, ps, N, T = 2, 8, 2, 128, 16, 16, 4, 32
+    q = jax.random.normal(KEY, (B, T, H, D), jnp.bfloat16)
+    kp = jax.random.normal(jax.random.PRNGKey(1), (P, ps, Hkv, D),
+                           jnp.bfloat16)
+    vp = jax.random.normal(jax.random.PRNGKey(2), (P, ps, Hkv, D),
+                           jnp.bfloat16)
+    bt = jax.random.randint(jax.random.PRNGKey(3), (B, N), 0, P)
+    sp = jnp.array([16, 0], jnp.int32)
+    o = chunked_prefill_attention(q, kp, vp, bt, sp, block_q=16,
+                                  interpret=False)
+    o_ref = ref.chunked_prefill_attention(q, kp, vp, bt, sp, D ** -0.5)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(o_ref, np.float32), **_tol(
+                                   jnp.bfloat16))
+
+
 @pytest.mark.tpu
 def test_paged_decode_attention_compiles_native_tpu():
     """Native (non-interpret) Mosaic lowering of the paged kernel —
@@ -196,6 +284,12 @@ def test_ops_wrappers():
     bt = jnp.arange(kp.shape[0])[None]
     op = ops.paged_decode_attention(qd, kp, vp, bt, jnp.array([100]))
     np.testing.assert_allclose(np.asarray(op), np.asarray(od_ref), atol=2e-5)
+
+    oc = ops.chunked_prefill_attention(q[:, -16:], kp, vp, bt,
+                                       jnp.array([S - 16]))
+    oc_ref = ref.chunked_prefill_attention(q[:, -16:], kp, vp, bt,
+                                           jnp.array([S - 16]), D ** -0.5)
+    np.testing.assert_allclose(np.asarray(oc), np.asarray(oc_ref), atol=2e-5)
 
 
 def test_model_ssm_block_matches_kernel_path():

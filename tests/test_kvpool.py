@@ -75,7 +75,8 @@ def test_alloc_free_never_leaks_or_double_frees(ops, num_pages):
 def test_cross_tier_prefix_sharing_impossible(tier_a, tier_b, toks, ps):
     """The prefix index is keyed by (tier, chain-hash, fill): a page
     registered at tier A is only ever returned to tier A lookups."""
-    p = PagePool(num_pages=16, page_size=ps)
+    # max_len must stay a multiple of the drawn page size
+    p = PagePool(num_pages=16, page_size=ps, max_len=ps * 16)
     chunks = prefix_chunk_hashes(toks, ps)
     pid = p.alloc(tier_a)
     chash, fill = chunks[0]
