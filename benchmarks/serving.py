@@ -114,6 +114,7 @@ def run(cache_modes=("stacked", "paged"), json_path=None):
                                                      params=srv.params)
         artifact["mixed_prefill"] = mixed_prefill_ab(cfg, lines,
                                                      params=srv.params)
+        artifact["churn"] = churn_ab(cfg, lines, params=srv.params)
         # req/s comparison is wall-clock on shared runners (noisy), so it
         # is recorded but only the deterministic privacy/memory/TTFT
         # checks below gate the run
@@ -131,6 +132,8 @@ def run(cache_modes=("stacked", "paged"), json_path=None):
     checks = dict(artifact.get("shared_prefix", {}).get("checks", {}))
     checks.update({f"mixed/{k}": ok for k, ok in artifact.get(
         "mixed_prefill", {}).get("checks", {}).items()})
+    checks.update({f"churn/{k}": ok for k, ok in artifact.get(
+        "churn", {}).get("checks", {}).items()})
     global _FAILED_CHECKS
     _FAILED_CHECKS = [k for k, ok in checks.items() if not ok]
     for k in _FAILED_CHECKS:
@@ -372,6 +375,170 @@ def mixed_prefill_ab(cfg, lines, params=None, page_size=16, n_long=3,
             out["chunked"]["total_work"]
             <= out["full"]["total_work"] * 1.05,
     }
+    return out
+
+
+def churn_ab(cfg, lines, params=None, n_requests=10, max_new=8):
+    """Island-churn A/B: the same workload on a 3-island SHORE-only mesh,
+    once undisturbed and once under a scripted drain (tick 2) + kill
+    (tick 5). Per the noisy-wallclock rule, only DETERMINISTIC metrics
+    gate the run: zero stranded requests, completed token streams
+    bit-exact vs the no-churn run, at least one live migration and one
+    failover actually exercised, zero cross-tier page imports (counter +
+    full pool audit), the tier-downhill leg refusing raw-KV shipment to a
+    less-trusted island, and total work-clock bounded — churn may cost
+    recompute work, never more than 3x, and never correctness. Wall-clock
+    req/s is recorded for context only."""
+    from repro.core.islands import IslandRegistry, personal_island
+    from repro.core.lighthouse import Lighthouse
+    from repro.core.mist import MIST
+    from repro.core.tide import TIDE
+    from repro.core.waves import WAVES, Policy, Request
+    from repro.serving.engine import TickOrchestrator, build_island_batchers
+
+    # mixed sensitivities -> KV tiers 1/2/3 all migrate during the churn
+    prompts = [(f"patient record number {i:02d} with several details",
+                (0.9, 0.6, 0.2)[i % 3]) for i in range(n_requests)]
+
+    def drive(events):
+        reg = IslandRegistry()
+        for isl in [personal_island("laptop", latency_ms=120,
+                                    capacity_units=2.0),
+                    personal_island("desktop", latency_ms=150,
+                                    capacity_units=2.0),
+                    personal_island("nas", latency_ms=200,
+                                    capacity_units=2.0)]:
+            reg.register(isl, reg.attestation_token(isl.island_id))
+        mist, tide, lh = MIST(), TIDE(reg), Lighthouse(reg)
+        for i in reg.all():
+            lh.heartbeat(i.island_id)
+        waves = WAVES(mist, tide, lh, Policy())
+        bats = build_island_batchers(cfg, reg, cache="paged", max_len=96,
+                                     slots_per_capacity_unit=2.0,
+                                     params=params)
+        all_bats = dict(bats)          # failure pops entries from `bats`
+        orch = TickOrchestrator(waves, reg, bats, decode_ticks_per_tick=1,
+                                migration_token_budget=256)
+        rids = [orch.submit(Request(query=q, priority="primary",
+                                    sensitivity_override=s),
+                            max_new_tokens=max_new) for q, s in prompts]
+        ev, k = dict(events), 0
+        t0 = time.perf_counter()
+        while orch.busy() and orch.tick_stats["ticks"] < 500:
+            orch.tick()
+            k += 1
+            if k in ev:
+                ev.pop(k)(orch)
+        dt = time.perf_counter() - t0
+        texts = {r: (orch.results[r].text if orch.results.get(r) else None)
+                 for r in rids}
+        audits_ok = all(b.pool.audit() and b.pool.in_use() == 0
+                        for b in orch.batchers.values())
+        return {
+            "texts": texts,
+            "ticks": orch.tick_stats["ticks"],
+            "work_clock": sum(b.work_clock for b in all_bats.values()),
+            "peak_pages": max(b.pool.stats["peak_in_use"]
+                              for b in all_bats.values()),
+            "stranded": sum(1 for t in texts.values() if t is None),
+            "migrations_started":
+                orch.tick_stats["migrations_started"],
+            "migrations": orch.tick_stats["migrations"],
+            "recomputes": orch.tick_stats["recomputes"],
+            "pages_shipped": orch.tick_stats["pages_shipped"],
+            "failovers": orch.tick_stats["failovers"],
+            "cross_tier_imports": sum(
+                b.pool.stats["import_tier_mismatch"]
+                for b in all_bats.values()),
+            "audits_ok": audits_ok,
+            "req_s": round(len([t for t in texts.values()
+                                if t is not None]) / max(dt, 1e-9), 2),
+        }
+
+    def downhill():
+        """Tier-1 KV drained toward a tier-2 island: the engine MUST strip
+        the pages (island.tier <= kv_tier fails) and the destination must
+        recompute — this leg exists so deleting/inverting the
+        ``_import_allowed`` rule fails the benchmark, not just the unit
+        tests (the main churn mesh is all-personal, where every import is
+        legal and the rule is never exercised)."""
+        from repro.core.islands import edge_island
+        reg = IslandRegistry()
+        for isl in [personal_island("laptop", latency_ms=120,
+                                    capacity_units=2.0),
+                    edge_island("edge", privacy=0.9, latency_ms=200,
+                                capacity_units=4.0)]:
+            reg.register(isl, reg.attestation_token(isl.island_id))
+        mist, tide, lh = MIST(), TIDE(reg), Lighthouse(reg)
+        for i in reg.all():
+            lh.heartbeat(i.island_id)
+        waves = WAVES(mist, tide, lh, Policy())
+        bats = build_island_batchers(cfg, reg, cache="paged", max_len=96,
+                                     slots_per_capacity_unit=2.0,
+                                     params=params)
+        orch = TickOrchestrator(waves, reg, bats, decode_ticks_per_tick=1,
+                                migration_token_budget=256)
+        rid = orch.submit(Request(query="summarize my medical history",
+                                  priority="secondary",
+                                  sensitivity_override=0.85,
+                                  prev_privacy=0.9), max_new_tokens=8)
+        k = 0
+        while orch.busy() and orch.tick_stats["ticks"] < 300:
+            orch.tick()
+            k += 1
+            if k == 2:
+                orch.drain_island("laptop")
+        edge_b = bats["edge"]
+        return {"completed": orch.results.get(rid) is not None,
+                "migrations_started":
+                    orch.tick_stats["migrations_started"],
+                "edge_imports": edge_b.migration_stats["imports"],
+                "edge_imported_pages":
+                    edge_b.pool.stats["imported_pages"],
+                "edge_recomputes": edge_b.migration_stats["recomputes"]}
+
+    base = drive({})
+    churn = drive({2: lambda o: o.drain_island("laptop"),
+                   5: lambda o: o.fail_island("desktop")})
+    down = downhill()
+    bitexact = churn["texts"] == base["texts"]
+    out = {
+        "no_churn": {k: v for k, v in base.items() if k != "texts"},
+        "churn": {k: v for k, v in churn.items() if k != "texts"},
+        "downhill": down,
+        "checks": {
+            "zero_stranded": churn["stranded"] == 0,
+            "bitexact_vs_no_churn": bitexact,
+            "migration_exercised": churn["migrations_started"] >= 1,
+            "failover_exercised": churn["failovers"] >= 1,
+            "zero_cross_tier_imports":
+                churn["cross_tier_imports"] == 0 and churn["audits_ok"],
+            "downhill_import_refused":
+                down["completed"] and down["migrations_started"] >= 1
+                and down["edge_imports"] == 0
+                and down["edge_imported_pages"] == 0
+                and down["edge_recomputes"] >= 1,
+            "work_overhead_bounded":
+                base["work_clock"] <= churn["work_clock"]
+                <= 3 * base["work_clock"],
+        },
+    }
+    lines.append(("serve/churn_no_churn", 0.0,
+                  f"ticks={base['ticks']} work={base['work_clock']}"
+                  f" pages_peak={base['peak_pages']}"))
+    lines.append(("serve/churn_drain_plus_kill", 0.0,
+                  f"ticks={churn['ticks']} work={churn['work_clock']}"
+                  f" pages_peak={churn['peak_pages']}"
+                  f" migrations={churn['migrations']}"
+                  f" shipped={churn['pages_shipped']}pg"
+                  f" failovers={churn['failovers']}"
+                  f" stranded={churn['stranded']}"
+                  f" bitexact={bitexact}"))
+    lines.append(("serve/churn_tier_downhill", 0.0,
+                  f"imports={down['edge_imports']}"
+                  f" shipped={down['edge_imported_pages']}pg"
+                  f" recomputes={down['edge_recomputes']}"
+                  f" completed={down['completed']}"))
     return out
 
 

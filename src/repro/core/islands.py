@@ -18,6 +18,16 @@ TIER_PERSONAL = 1
 TIER_PRIVATE_EDGE = 2
 TIER_CLOUD = 3
 
+# Island lifecycle (churn): ACTIVE islands take new work; DRAINING islands
+# finish/migrate their in-flight work but are excluded from routing; FAILED
+# islands are gone — their in-flight requests are stranded until the
+# orchestrator requeues them. Status is registry state, not Island state:
+# the Island dataclass is frozen and describes the resource, while
+# lifecycle is an operational fact that changes at runtime.
+STATUS_ACTIVE = "active"
+STATUS_DRAINING = "draining"
+STATUS_FAILED = "failed"
+
 # paper Sec XI-B latency bands (ms): (min, max)
 LATENCY_BANDS = {
     TIER_PERSONAL: (50.0, 500.0),
@@ -68,6 +78,8 @@ class IslandRegistry:
     def __init__(self, secret: bytes = b"islandrun-demo-secret"):
         self._secret = secret
         self._islands: dict[str, Island] = {}
+        self._status: dict[str, str] = {}
+        self._teardown_hooks: list = []
 
     def attestation_token(self, island_id: str) -> str:
         return hmac.new(self._secret, island_id.encode(),
@@ -81,9 +93,37 @@ class IslandRegistry:
         if not (0 <= island.privacy <= 1):
             raise RegistrationError("privacy score out of range")
         self._islands[island.island_id] = island
+        self._status[island.island_id] = STATUS_ACTIVE
+
+    def add_teardown_hook(self, fn) -> None:
+        """Register ``fn(island_id)`` to run when an island deregisters.
+        TIDE, LIGHTHOUSE and the orchestrator use this to drop their
+        per-island state — without it, deregistration leaves load state,
+        heartbeats, pool telemetry and batcher entries dangling."""
+        self._teardown_hooks.append(fn)
 
     def deregister(self, island_id: str) -> None:
-        self._islands.pop(island_id, None)
+        if self._islands.pop(island_id, None) is None:
+            return
+        self._status.pop(island_id, None)
+        for fn in self._teardown_hooks:
+            fn(island_id)
+
+    # ---------------------------------------------------------- lifecycle
+    def status(self, island_id: str) -> str:
+        """Lifecycle status; unknown islands report FAILED (an island that
+        is not registered can never be routed to — fail closed)."""
+        return self._status.get(island_id, STATUS_FAILED)
+
+    def set_status(self, island_id: str, status: str) -> None:
+        assert status in (STATUS_ACTIVE, STATUS_DRAINING, STATUS_FAILED)
+        if island_id in self._islands:
+            self._status[island_id] = status
+
+    def is_routable(self, island_id: str) -> bool:
+        """Only ACTIVE islands accept new work; draining islands finish
+        what they hold, failed islands hold nothing."""
+        return self.status(island_id) == STATUS_ACTIVE
 
     def get(self, island_id: str) -> Island:
         return self._islands[island_id]

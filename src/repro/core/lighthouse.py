@@ -20,6 +20,20 @@ class Lighthouse:
         self.crashed = False
         self.discovery_queries = 0
         self._pool_stats: dict[str, dict] = {}
+        self._migration_stats: dict[str, dict] = {}
+        hook = getattr(registry, "add_teardown_hook", None)
+        if hook is not None:
+            hook(self.detach)
+
+    def detach(self, island_id: str):
+        """Drop an island's liveness + telemetry state (registry teardown
+        hook, also called on island failure): a gone island must not keep
+        a live heartbeat, stale pool telemetry, or a slot in the crashed-
+        LIGHTHOUSE fallback cache."""
+        self._last_beat.pop(island_id, None)
+        self._pool_stats.pop(island_id, None)
+        self._migration_stats.pop(island_id, None)
+        self._cache = [i for i in self._cache if i.island_id != island_id]
 
     def advance(self, dt: float):
         self.clock += dt
@@ -55,11 +69,37 @@ class Lighthouse:
     def pool_telemetry(self) -> dict:
         return {iid: dict(s) for iid, s in self._pool_stats.items()}
 
+    def report_migration(self, island_id: str, stats: dict):
+        """Publish an island's cumulative migration counters (requests
+        thawed by KV-page import vs recompute fallback, data pages shipped,
+        same-tier prefix re-attach hits on import). The per-island dicts
+        are cumulative; ``mesh_migration_stats()`` is the mesh-wide sum the
+        churn benchmark gates on."""
+        if island_id in self.registry:
+            self._migration_stats[island_id] = dict(stats,
+                                                    reported_at=self.clock)
+
+    def mesh_migration_stats(self) -> dict:
+        out = {"imports": 0, "imported_pages": 0, "import_attach_hits": 0,
+               "recomputes": 0, "import_tier_mismatch": 0}
+        for s in self._migration_stats.values():
+            for k in out:
+                out[k] += int(s.get(k, 0))
+        return out
+
+    def migration_telemetry(self) -> dict:
+        return {iid: dict(s) for iid, s in self._migration_stats.items()}
+
     def get_islands(self) -> list:
-        """Live islands; cached list when crashed (conservative fallback)."""
+        """Live, routable islands; cached list when crashed (conservative
+        fallback). Draining/failed islands heartbeat but take no new work,
+        so discovery excludes them."""
         if self.crashed:
             return list(self._cache)
         self.discovery_queries += 1
-        alive = [i for i in self.registry.all() if self.is_alive(i.island_id)]
+        routable = getattr(self.registry, "is_routable", None)
+        alive = [i for i in self.registry.all()
+                 if self.is_alive(i.island_id)
+                 and (routable is None or routable(i.island_id))]
         self._cache = alive
         return alive

@@ -20,6 +20,8 @@ from __future__ import annotations
 import math
 from dataclasses import dataclass, field
 
+from repro.core.islands import STATUS_ACTIVE
+
 # Paper Sec IX-A, implemented literally: with buffer b, route to cloud when
 # local capacity R < 1-b (conservative 30% -> R<0.70, moderate 20% -> R<0.80,
 # aggressive 10% -> R<0.90).
@@ -45,6 +47,12 @@ RECOVERY_CAP = 0.99
 # inflight work at this rate before feeding the queueing-latency term.
 PREFILL_BACKLOG_TOKENS_PER_UNIT = 64.0
 
+# One work unit's worth of migrated context tokens: thawing a migrated
+# request onto an island costs page imports or a recompute prefill, so the
+# engine charges the destination at this rate — drain pressure spreads a
+# drained island's load across destinations instead of dogpiling the first.
+MIGRATION_TOKENS_PER_UNIT = 128.0
+
 
 @dataclass
 class LoadState:
@@ -69,10 +77,19 @@ class TIDE:
         self.monitor_interval_s = monitor_interval_s  # paper: 1s sampling
         self.state: dict[str, LoadState] = {}
         self.clock: float = 0.0
+        hook = getattr(registry, "add_teardown_hook", None)
+        if hook is not None:
+            hook(self.detach)
 
     # ------------------------------------------------------------ process
     def _st(self, island_id: str) -> LoadState:
         return self.state.setdefault(island_id, LoadState())
+
+    def detach(self, island_id: str):
+        """Drop per-island load state (registry teardown hook): a
+        deregistered island must not keep decaying phantom load or stale
+        hysteresis that would resurface if the id is ever reused."""
+        self.state.pop(island_id, None)
 
     def advance(self, dt: float):
         """Advance the virtual clock; load decays exponentially."""
@@ -98,8 +115,13 @@ class TIDE:
 
     # ----------------------------------------------------------- capacity
     def capacity(self, island_id: str) -> float:
-        """R(t) = 1 - max(cpu, gpu, mem).  Crashed TIDE -> 0 (conservative)."""
+        """R(t) = 1 - max(cpu, gpu, mem).  Crashed TIDE -> 0 (conservative).
+        Draining/failed islands report 0 available capacity — the drain
+        pressure that keeps them out of the routing objective even when a
+        crashed LIGHTHOUSE serves a stale cached island list."""
         if self.crashed:
+            return 0.0
+        if not self._active(island_id):
             return 0.0
         island = self.registry.get(island_id)
         if island.unbounded:
@@ -126,7 +148,13 @@ class TIDE:
         shift = (1.0 - BUFFERS[self.buffer]) - 0.80
         return float(min(max(gate + shift, 0.0), 0.95))
 
+    def _active(self, island_id: str) -> bool:
+        status = getattr(self.registry, "status", None)
+        return status is None or status(island_id) == STATUS_ACTIVE
+
     def admits(self, island_id: str, priority: str = "secondary") -> bool:
+        if not self._active(island_id):
+            return False         # draining/failed: no new work, any priority
         island = self.registry.get(island_id)
         if island.unbounded:
             return True

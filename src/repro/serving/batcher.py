@@ -36,6 +36,18 @@ before running decode, so one long prompt can no longer freeze an
 island's decode slots for its whole length (Sarathi-style mixed
 scheduling). ``prefill="full"`` keeps the monolithic single-dispatch
 full-prompt admission as the A/B baseline.
+
+Both managers support **live migration** (freeze/thaw): ``freeze_request``
+evacuates a request — still queued, mid-prefill, or mid-decode — into a
+``MigrationTicket`` (its KV pages or dense cache row, generation progress,
+unfinished chunk plan and per-request sampling state), and
+``submit_ticket`` thaws a ticket through the normal admission queue on the
+destination: KV-page import (prefix-keyed pages re-attach to same-tier
+chain-hash matches, everything else deep-copies) when the payload is legal
+and affordable, recompute-of-context otherwise. Either way the resumed
+token stream is exactly the one the source would have produced. Preemption
+reuses the same machinery: the victim requeues with a pages-less resume
+ticket, so its already-generated tokens survive the eviction.
 """
 from __future__ import annotations
 
@@ -51,9 +63,21 @@ from repro.models.model import effective_pattern, get_model
 from repro.models.steps import (make_chunked_prefill_step,
                                 make_paged_serve_step, make_prefill_step,
                                 make_serve_step)
-from repro.serving.kvpool import (SCRATCH_PAGE, PagePool,
-                                  prefix_chunk_hashes, resolve_chunk_page)
+from repro.serving.kvpool import (SCRATCH_PAGE, PagePool, export_request,
+                                  import_request, prefix_chunk_hashes,
+                                  resolve_chunk_page)
+from repro.serving.migration import MigrationTicket, ticket_fits
 from repro.serving.sampling import sample
+
+
+@jax.jit
+def _sample_rows(logits, keys, temperature):
+    """One fused stochastic-sampling dispatch over per-slot PRNG keys:
+    row i is sampled exactly as ``sample(logits[i:i+1], keys[i], t)``
+    would sample it, so per-request key streams (the migration
+    determinism requirement) cost one dispatch, not one per slot."""
+    return jax.vmap(lambda l, k: sample(l[None], k, temperature)[0])(
+        logits, keys)
 
 
 @dataclass
@@ -65,12 +89,17 @@ class SlotState:
     generated: list = field(default_factory=list)
     max_new: int = 16
     pages: list = field(default_factory=list)   # paged mode: block list
-    tier: Optional[int] = None                  # paged mode: trust tier
+    tier: Optional[int] = None                  # trust tier
     shared_pages: int = 0                       # paged mode: prefix hits
-    prompt: str = ""                            # paged mode: for preemption
-    prompt_ids: list = field(default_factory=list)  # chunked prefill
+    prompt: str = ""                            # for preemption/migration
+    prompt_ids: list = field(default_factory=list)  # prefill token sequence
     chunks: list = field(default_factory=list)  # pending (j, hash, fill)
     next_chunk: int = 0                         # first undispatched entry
+    # resumed requests (migration thaw / preemption re-admission): output
+    # tokens folded into prompt_ids as recompute context — the full output
+    # stream is carried + generated
+    carried: list = field(default_factory=list)
+    sample_key: Optional[object] = None         # per-request PRNG state
 
 
 class _BatcherBase:
@@ -93,6 +122,13 @@ class _BatcherBase:
         # (request could never fit the page pool)
         self.finished: dict[int, Optional[str]] = {}
         self._next_id = 0
+        # rid -> MigrationTicket for queued thaws (entries ride the normal
+        # queue for ordering/backpressure; admission resolves them)
+        self._tickets: dict[int, MigrationTicket] = {}
+        self.migration_stats = {"exports": 0, "imports": 0,
+                                "imported_pages": 0, "import_attach_hits": 0,
+                                "recomputes": 0}
+        self.preempted_rids: list = []
         self._prefill = jax.jit(make_prefill_step(self.model))
         # "admissions" counts requests entering a slot; "prefill_dispatches"
         # counts model prefill dispatches (1/admission monolithic, 1/chunk
@@ -123,6 +159,76 @@ class _BatcherBase:
                                  "submit_work": self.work_clock,
                                  "tokens_skipped": 0}
         return rid
+
+    def submit_ticket(self, ticket: MigrationTicket) -> int:
+        """Enqueue a frozen in-flight request for thawing here. The ticket
+        rides the normal admission queue (same ordering, same
+        backpressure); admission either imports its KV payload or
+        recomputes the context from tokens. Returns this batcher's rid."""
+        rid = self._next_id
+        self._next_id += 1
+        self._tickets[rid] = ticket
+        self.queue.append((rid, ticket.prompt, ticket.max_new, ticket.tier))
+        self.stats["queued_peak"] = max(self.stats["queued_peak"],
+                                        len(self.queue))
+        enc_len = getattr(self, "_enc_len", None)
+        if enc_len is not None:
+            # the thaw prefills the whole resumed context, not just the
+            # prompt — report the real backlog so TIDE sees the load a
+            # migration destination is absorbing
+            enc_len[rid] = len(ticket.context_ids())
+        rec = dict(ticket.log) if ticket.log else {}
+        rec.setdefault("tokens_skipped", 0)
+        # clock-relative fields RE-STAMP on this batcher's clocks — the
+        # source's tick/work coordinates mean nothing here and would make
+        # a still-pending TTFT span two unrelated clocks (time already
+        # spent on the source is not re-counted); cumulative fields
+        # (tokens_skipped, migrations, an already-recorded TTFT) carry
+        rec["submit_tick"] = self.stats["ticks"]
+        rec["submit_work"] = self.work_clock
+        rec["migrations"] = rec.get("migrations", 0) + 1
+        self.request_log[rid] = rec
+        return rid
+
+    # ----------------------------------------------------------- migration
+    def freeze_request(self, rid: int) -> Optional[MigrationTicket]:
+        """Evacuate a request for live migration: still-queued requests
+        lift out with no KV, in-slot requests (mid-prefill or mid-decode)
+        freeze via the cache-manager-specific ``_freeze_slot``. Returns
+        None when the rid is unknown or already finished (nothing left to
+        migrate)."""
+        for i, (qrid, prompt, max_new, tier) in enumerate(self.queue):
+            if qrid != rid:
+                continue
+            self.queue.pop(i)
+            getattr(self, "_enc_len", {}).pop(rid, None)
+            t = self._tickets.pop(rid, None)
+            if t is not None:
+                return t            # still a ticket: forward untouched
+            return MigrationTicket(
+                rid=rid, prompt=prompt,
+                prompt_ids=self._encode(prompt, max_new), generated=[],
+                max_new=max_new, tier=tier, phase="queued",
+                log=self.request_log.get(rid))
+        for si, s in enumerate(self.slots):
+            if s.active and s.request_id == rid:
+                self.migration_stats["exports"] += 1
+                return self._freeze_slot(si)
+        return None
+
+    def _resume_fields(self, s: SlotState) -> dict:
+        """Ticket fields shared by both cache managers' ``_freeze_slot``:
+        un-fold the recompute context back into (original prompt, full
+        output stream) so a ticket never double-counts tokens a previous
+        resume folded into ``prompt_ids``."""
+        n_folded = len(s.carried)
+        orig = (s.prompt_ids[:len(s.prompt_ids) - n_folded] if n_folded
+                else list(s.prompt_ids))
+        return dict(rid=s.request_id, prompt=s.prompt, prompt_ids=orig,
+                    generated=list(s.carried) + list(s.generated),
+                    max_new=s.max_new, tier=s.tier,
+                    sample_key=s.sample_key,
+                    log=self.request_log.get(s.request_id))
 
     # ------------------------------------------------------ lifecycle notes
     def _note_admission(self, rid, prompt_tokens):
@@ -158,13 +264,33 @@ class _BatcherBase:
     def _encode(self, prompt, max_new):
         return self.tok.encode(prompt)[: self.max_len - max_new - 1]
 
-    def _sample_next(self, logits):
-        self.key, k = jax.random.split(self.key)
-        return np.asarray(sample(logits, k, self.temperature))
+    def _next_sample_key(self):
+        self.key, sk = jax.random.split(self.key)
+        return sk
+
+    def _sample_ready(self, logits, ready):
+        """Next token per decode-ready slot, (num_slots, V) logits.
+        Sampling state is PER SLOT (``SlotState.sample_key``), so a frozen
+        request's stream continues bit-identically wherever it thaws;
+        greedy (temperature 0, the default) never consumes the key at
+        all."""
+        if self.temperature <= 0.0:
+            nxt = np.asarray(jnp.argmax(logits, axis=-1))
+            return {si: int(nxt[si]) for si in ready}
+        keys = []
+        for si in ready:
+            s = self.slots[si]
+            s.sample_key, k = jax.random.split(s.sample_key)
+            keys.append(k)
+        toks = np.asarray(_sample_rows(
+            logits[jnp.asarray(ready)], jnp.stack(keys),
+            jnp.float32(self.temperature)))
+        return {si: int(toks[n]) for n, si in enumerate(ready)}
 
     def _finish_slot(self, si):
         s = self.slots[si]
-        self.finished[s.request_id] = self.tok.decode(s.generated)
+        self.finished[s.request_id] = self.tok.decode(
+            list(s.carried) + list(s.generated))
         rec = self.request_log.get(s.request_id)
         if rec is not None:
             rec["done_tick"] = self.stats["ticks"]
@@ -199,21 +325,86 @@ class ContinuousBatcher(_BatcherBase):
         for si, s in enumerate(self.slots):
             if s.active or not self.queue:
                 continue
-            rid, prompt, max_new, _tier = self.queue.pop(0)
-            ids = self._encode(prompt, max_new)
+            rid, prompt, max_new, tier = self.queue.pop(0)
+            ticket = self._tickets.pop(rid, None)
+            if ticket is not None and self._thaw_dense(si, rid, ticket):
+                continue
+            if ticket is not None:
+                # recompute thaw: prefill prompt + generated[:-1] as one
+                # context, then decode continues with the pending token
+                ids = ticket.context_ids()
+                carried, pending = ticket.progress()
+            else:
+                ids = self._encode(prompt, max_new)
+                carried, pending = [], []
+            if len(ids) + max_new - len(carried) - len(pending) \
+                    >= self.max_len:
+                self.finished[rid] = None       # resumed context outgrew us
+                continue
             toks = jnp.asarray(np.asarray(ids, np.int32)[None])
             cache = self.model.init_cache(1, self.max_len,
                                           dtype=jnp.bfloat16)
             logits, cache = self._prefill(self.params, cache,
                                           {"tokens": toks})
             self._cache = self._write(self._cache, cache, jnp.int32(si))
-            tok0 = int(jnp.argmax(logits[0]))
+            sk = (ticket.sample_key if ticket is not None
+                  and ticket.sample_key is not None
+                  else self._next_sample_key())
+            gen = pending if pending else [int(jnp.argmax(logits[0]))]
             self.slots[si] = SlotState(active=True, request_id=rid,
                                        pos=len(ids), prompt_len=len(ids),
-                                       generated=[tok0], max_new=max_new)
+                                       generated=gen, carried=carried,
+                                       max_new=max_new, tier=tier,
+                                       prompt=prompt, prompt_ids=list(ids),
+                                       sample_key=sk)
+            if ticket is not None and ticket.resumes_compute():
+                self.migration_stats["recomputes"] += 1
             self._note_admission(rid, len(ids))
             self._note_prefill_dispatch(len(ids))
-            self._note_first_token(rid)
+            if not pending:
+                self._note_first_token(rid)
+
+    # ----------------------------------------------------------- migration
+    def _freeze_slot(self, si) -> MigrationTicket:
+        """Export the slot's dense cache row (positions past ``pos`` are
+        never attended, so the whole row ships as-is)."""
+        s = self.slots[si]
+        dense = [np.asarray(leaf[si])
+                 for leaf in jax.tree.leaves(self._cache)]
+        t = MigrationTicket(**self._resume_fields(s), kv_tokens=s.pos,
+                            dense=dense, max_len=self.max_len,
+                            phase="decode")
+        self.slots[si] = SlotState()
+        return t
+
+    def _thaw_dense(self, si, rid, t: MigrationTicket) -> bool:
+        """Import a stacked-mode ticket's cache row into slot ``si``.
+        False (caller recomputes) when the payload is absent or its leaf
+        shapes don't match this batcher's cache."""
+        if t.dense is None or t.max_len != self.max_len or not t.generated:
+            return False
+        context = t.context_ids()
+        if t.kv_tokens != len(context):
+            return False
+        leaves = jax.tree.leaves(self._cache)
+        if [tuple(d.shape) for d in t.dense] != \
+                [tuple(l.shape[1:]) for l in leaves]:
+            return False
+        one = jax.tree.unflatten(jax.tree.structure(self._cache),
+                                 [jnp.asarray(d) for d in t.dense])
+        self._cache = self._write(self._cache, one, jnp.int32(si))
+        sk = (t.sample_key if t.sample_key is not None
+              else self._next_sample_key())
+        carried, pending = t.progress()
+        self.slots[si] = SlotState(active=True, request_id=rid,
+                                   pos=t.kv_tokens, prompt_len=len(context),
+                                   generated=pending, carried=carried,
+                                   max_new=t.max_new, tier=t.tier,
+                                   prompt=t.prompt, prompt_ids=context,
+                                   sample_key=sk)
+        self.migration_stats["imports"] += 1
+        self._note_admission(rid, len(context))
+        return True
 
     # --------------------------------------------------------------- tick
     def tick(self):
@@ -231,15 +422,15 @@ class ContinuousBatcher(_BatcherBase):
             poss[si] = s.pos
         logits, self._cache = self._decode_all(
             self.params, self._cache, jnp.asarray(toks), jnp.asarray(poss))
-        nxt = self._sample_next(logits[:, 0, :])
+        nxt = self._sample_ready(logits[:, 0, :], active)
         self.stats["decode_steps"] += 1
         self.work_clock += len(active)
         for si in active:
             s = self.slots[si]
-            s.generated.append(int(nxt[si]))
+            s.generated.append(nxt[si])
             s.pos += 1
             self.stats["decode_tokens"] += 1
-            done = (len(s.generated) >= s.max_new
+            done = (len(s.carried) + len(s.generated) >= s.max_new
                     or s.pos >= self.max_len - 1)
             if done:
                 self._finish_slot(si)
@@ -320,14 +511,23 @@ class PagedContinuousBatcher(_BatcherBase):
     def _admit_full(self):
         """Monolithic admission (the pre-chunking baseline): one blocking
         full-prompt prefill dispatch per admitted request, scattered into
-        the pool in one fused whole-admission write."""
+        the pool in one fused whole-admission write. Migration tickets
+        thaw through the SAME path as a recompute of their context (page
+        import is a chunked-mode feature): the resumed request's pending
+        token survives, so its stream continues bit-exactly."""
         for si, s in enumerate(self.slots):
             if s.active:
                 continue
             if not self.queue:
                 break
             rid, prompt, max_new, tier = self.queue[0]
-            ids = self._encode(prompt, max_new)
+            ticket = self._tickets.get(rid)
+            if ticket is not None:
+                ids = ticket.context_ids()
+                carried, pending = ticket.progress()
+            else:
+                ids = self._encode(prompt, max_new)
+                carried, pending = [], []
             chunks = prefix_chunk_hashes(ids, self.page_size)
             hits0 = self.pool.stats["share_hits"]
             miss0 = self.pool.stats["share_misses"]
@@ -338,14 +538,18 @@ class PagedContinuousBatcher(_BatcherBase):
                     break
                 shared.append(pid)
             n_fresh = len(chunks) - len(shared)
-            # a sequence must be able to run ALONE (prompt + every decode
-            # token) or preemption can never rescue it: admitting would
-            # self-preempt forever. Reject just this request (None result,
-            # distinguishable from a real empty generation) instead of
-            # blocking the queue or crashing the serving loop.
-            worst = -(-(len(ids) + max_new) // self.page_size)
-            if worst > self.pool.num_pages - 1:
+            # a sequence must be able to run ALONE (context + every decode
+            # token still owed) or preemption can never rescue it:
+            # admitting would self-preempt forever. Reject just this
+            # request (None result, distinguishable from a real empty
+            # generation) instead of blocking the queue or crashing the
+            # serving loop.
+            total = len(ids) + max_new - len(carried) - len(pending)
+            if total >= self.max_len \
+                    or -(-total // self.page_size) \
+                    > self.pool.num_pages - 1:
                 self.queue.pop(0)
+                self._tickets.pop(rid, None)
                 self.finished[rid] = None
                 self.stats["rejected_too_large"] += 1
                 continue
@@ -360,13 +564,15 @@ class PagedContinuousBatcher(_BatcherBase):
                 self.blocked_last_tick += 1
                 break
             self.queue.pop(0)
+            self._tickets.pop(rid, None)
             for pid in shared:
                 self.pool.incref(pid)
             pages = list(shared)
             for _ in range(n_fresh):
                 pages.append(self.pool.alloc(tier))
-            # full-prompt prefill (exact length); shared pages already hold
-            # identical K/V — only fresh chunks are scattered into the pool
+            # full-context prefill (exact length); shared pages already
+            # hold identical K/V — only fresh chunks are scattered into
+            # the pool
             toks = jnp.asarray(np.asarray(ids, np.int32)[None])
             cache = self.model.init_cache(1, self.max_len,
                                           dtype=jnp.bfloat16)
@@ -383,94 +589,206 @@ class PagedContinuousBatcher(_BatcherBase):
             row = np.zeros(self.pages_per_seq, np.int32)
             row[:len(pages)] = pages
             self.block_tables[si] = row
-            tok0 = int(jnp.argmax(logits[0]))
+            sk = (ticket.sample_key if ticket is not None
+                  and ticket.sample_key is not None
+                  else self._next_sample_key())
+            gen = pending if pending else [int(jnp.argmax(logits[0]))]
             self.slots[si] = SlotState(active=True, request_id=rid,
                                        pos=len(ids), prompt_len=len(ids),
-                                       generated=[tok0], max_new=max_new,
+                                       generated=gen, carried=carried,
+                                       max_new=max_new,
                                        pages=pages, tier=tier,
                                        shared_pages=len(shared),
-                                       prompt=prompt)
+                                       prompt=prompt, prompt_ids=list(ids),
+                                       sample_key=sk)
             self.stats["share_hits"] += len(shared)
+            if ticket is not None and ticket.resumes_compute():
+                self.migration_stats["recomputes"] += 1
             self._note_admission(rid, len(ids))
             self._note_prefill_dispatch(len(ids))
-            self._note_first_token(rid)
+            if not pending:
+                self._note_first_token(rid)
 
     def _admit_chunked(self):
         """Plan-only admission: split the prompt into page-size chunks,
         attach to every leading chunk already cached at this exact trust
         tier (those are skipped — their K/V is live pool state), and queue
         the rest for budgeted dispatch by ``_prefill_tick``. No model
-        dispatch happens here, so admission can never block decode."""
+        dispatch happens here, so admission can never block decode.
+        Migration tickets resolve here too: KV-page import when legal and
+        affordable, recompute-of-context otherwise."""
         for si, s in enumerate(self.slots):
             if s.active:
                 continue
             if not self.queue:
                 break
             rid, prompt, max_new, tier = self.queue[0]
-            ids = self._encode(prompt, max_new)
-            chunks = prefix_chunk_hashes(ids, self.page_size)
-            # the admission probe's counter side effects are always rolled
-            # back: every chunk is accounted exactly ONCE at resolution —
-            # admission attaches via the explicit += below, everything
-            # else (late attach / fresh miss) by the dispatch-time
-            # re-probe — so retries and re-probes can't dilute hit_rate
-            hits0 = self.pool.stats["share_hits"]
-            miss0 = self.pool.stats["share_misses"]
-            shared = []
-            for chash, fill in chunks:
-                pid = self.pool.lookup_prefix(tier, chash, fill)
-                if pid is None:
-                    break
-                shared.append(pid)
-            self.pool.stats["share_hits"] = hits0
-            self.pool.stats["share_misses"] = miss0
-            n_fresh = len(chunks) - len(shared)
-            # same alone-fit rejection rule as the monolithic path
-            worst = -(-(len(ids) + max_new) // self.page_size)
-            if worst > self.pool.num_pages - 1:
-                self.queue.pop(0)
-                self._enc_len.pop(rid, None)
-                self.finished[rid] = None
-                self.stats["rejected_too_large"] += 1
-                continue
-            if self.pool.free_count() - self.reserved < n_fresh:
+            ticket = self._tickets.get(rid)
+            if ticket is not None:
+                status = self._admit_ticket(si, rid, ticket)
+            else:
+                ids = self._encode(prompt, max_new)
+                status = self._admit_ids(si, rid, ids, max_new, tier,
+                                         prompt)
+            if status == "blocked":
                 # pool exhausted once other slots' pending chunks are
                 # counted — leave the request queued (eviction pressure)
                 self.pool.stats["blocked"] += 1
                 self.blocked_last_tick += 1
                 break
             self.queue.pop(0)
+            self._tickets.pop(rid, None)
             self._enc_len.pop(rid, None)
-            self.pool.stats["share_hits"] += len(shared)
-            for pid in shared:
-                self.pool.incref(pid)
-            self.reserved += n_fresh
-            row = np.zeros(self.pages_per_seq, np.int32)
-            row[:len(shared)] = shared
-            self.block_tables[si] = row
-            # the plan holds every chunk that must DISPATCH: fresh chunks,
-            # plus the last chunk even when shared (its boundary logits
-            # are the request's first token — it dispatches against the
-            # scratch page so the shared page is never rewritten)
-            plan = []
-            skipped = 0
-            for j, (chash, fill) in enumerate(chunks):
-                if j < len(shared) and j < len(chunks) - 1:
-                    skipped += fill
-                else:
-                    plan.append((j, chash, fill))
-            self.slots[si] = SlotState(active=True, request_id=rid, pos=0,
-                                       prompt_len=len(ids), generated=[],
-                                       max_new=max_new, pages=list(shared),
-                                       tier=tier, shared_pages=len(shared),
-                                       prompt=prompt, prompt_ids=ids,
-                                       chunks=plan, next_chunk=0)
-            self.stats["share_hits"] += len(shared)
-            self.stats["prefix_tokens_skipped"] += skipped
-            self._note_admission(rid, len(ids))
-            rec = self.request_log.get(rid)
-            if rec is not None:
-                rec["tokens_skipped"] = skipped
+
+    def _admit_ids(self, si, rid, ids, max_new, tier, prompt,
+                   carried=(), pending=()):
+        """Plan-only admission of a token sequence into slot ``si`` —
+        shared by fresh requests, preemption re-admissions and migration
+        recompute-thaws. ``carried``/``pending`` restore a resumed
+        request's generation progress (``pending`` holds the token already
+        sampled but not yet fed through the model); both empty means a
+        fresh request whose first token comes from the final chunk's
+        boundary logits. Returns "ok" | "blocked" | "rejected"."""
+        chunks = prefix_chunk_hashes(ids, self.page_size)
+        # the admission probe's counter side effects are always rolled
+        # back: every chunk is accounted exactly ONCE at resolution —
+        # admission attaches via the explicit += below, everything
+        # else (late attach / fresh miss) by the dispatch-time
+        # re-probe — so retries and re-probes can't dilute hit_rate
+        hits0 = self.pool.stats["share_hits"]
+        miss0 = self.pool.stats["share_misses"]
+        shared = []
+        for chash, fill in chunks:
+            pid = self.pool.lookup_prefix(tier, chash, fill)
+            if pid is None:
+                break
+            shared.append(pid)
+        self.pool.stats["share_hits"] = hits0
+        self.pool.stats["share_misses"] = miss0
+        # same alone-fit rejection rule as the monolithic path: context
+        # plus every still-owed decode token must fit max_len (a resumed
+        # request only owes max_new minus what it already generated) and
+        # its worst-case pages must fit the pool alone
+        total = len(ids) + max_new - len(carried) - len(pending)
+        if total >= self.max_len \
+                or -(-total // self.page_size) > self.pool.num_pages - 1:
+            self.finished[rid] = None
+            self.stats["rejected_too_large"] += 1
+            return "rejected"
+        # the plan holds every chunk that must DISPATCH: fresh chunks,
+        # plus the last chunk even when shared IF the first token is still
+        # owed (its boundary logits are that token — it dispatches against
+        # the scratch page so the shared page is never rewritten); a
+        # resumed request already holds its next token, so a fully-shared
+        # context skips everything
+        plan = []
+        skipped = 0
+        for j, (chash, fill) in enumerate(chunks):
+            if j < len(shared) and (j < len(chunks) - 1 or pending):
+                skipped += fill
+            else:
+                plan.append((j, chash, fill))
+        n_fresh = sum(1 for (j, _h, _f) in plan if j >= len(shared))
+        if self.pool.free_count() - self.reserved < n_fresh:
+            return "blocked"
+        self.pool.stats["share_hits"] += len(shared)
+        for pid in shared:
+            self.pool.incref(pid)
+        self.reserved += n_fresh
+        row = np.zeros(self.pages_per_seq, np.int32)
+        row[:len(shared)] = shared
+        self.block_tables[si] = row
+        self.slots[si] = SlotState(active=True, request_id=rid, pos=0,
+                                   prompt_len=len(ids),
+                                   generated=list(pending),
+                                   carried=list(carried),
+                                   max_new=max_new, pages=list(shared),
+                                   tier=tier, shared_pages=len(shared),
+                                   prompt=prompt, prompt_ids=list(ids),
+                                   chunks=plan, next_chunk=0,
+                                   sample_key=self._next_sample_key())
+        if not plan:                    # fully-shared resumed context:
+            self.slots[si].pos = len(ids)    # decode-ready immediately
+        self.stats["share_hits"] += len(shared)
+        self.stats["prefix_tokens_skipped"] += skipped
+        self._note_admission(rid, len(ids))
+        rec = self.request_log.get(rid)
+        if rec is not None:
+            rec["tokens_skipped"] = rec.get("tokens_skipped", 0) + skipped
+        return "ok"
+
+    def _admit_ticket(self, si, rid, t: MigrationTicket):
+        """Thaw a migration ticket into slot ``si``. When the payload is
+        compatible (page records at this pool's page size, admissible tier,
+        room for the import plus reservations for any chunks the source
+        hadn't prefilled yet) the KV pages import directly — prefix-keyed
+        records re-attach to this pool's own same-tier pages where the
+        chain hash matches, everything else deep-copies. Any fail-closed
+        refusal (untiered, tier mismatch, no byte payload) or structural
+        mismatch falls back to recomputing the context from tokens. Either
+        way the request keeps its full generation progress and sampling
+        state, so the continued stream is the one the source would have
+        produced."""
+        context = t.context_ids()
+        carried, pending = t.progress()
+        if not ticket_fits(t, self.max_len, self.page_size,
+                           self.pool.num_pages):
+            # same predicate the engine applies before dispatch, so a
+            # dispatched ticket can only land here if the engine had no
+            # better placement (it prefers bouncing to the source)
+            self.finished[rid] = None
+            self.stats["rejected_too_large"] += 1
+            return "rejected"
+        ps = self.page_size
+        if t.pages and t.page_size == ps:
+            chunks = prefix_chunk_hashes(context, ps)
+            kv_chunks = len(t.pages)
+            if kv_chunks <= len(chunks) and kv_chunks <= self.pages_per_seq \
+                    and t.kv_tokens == min(kv_chunks * ps, len(context)):
+                plan = [(j,) + chunks[j]
+                        for j in range(kv_chunks, len(chunks))]
+                if not pending and not plan:
+                    # mid-prefill freeze where every page was shared: the
+                    # first token is still owed, so the last chunk replays
+                    # for its boundary logits (scratch-masked write)
+                    j = len(chunks) - 1
+                    plan = [(j,) + chunks[j]]
+                n_fresh = sum(1 for (j, _h, _f) in plan if j >= kv_chunks)
+                if self.pool.free_count() - self.reserved \
+                        < len(t.pages) + n_fresh:
+                    return "blocked"
+                res = import_request(self.pool, t.pages, t.tier)
+                if res is not None:
+                    page_ids, copied, hits = res
+                    row = np.zeros(self.pages_per_seq, np.int32)
+                    row[:len(page_ids)] = page_ids
+                    self.block_tables[si] = row
+                    self.reserved += n_fresh
+                    sk = (t.sample_key if t.sample_key is not None
+                          else self._next_sample_key())
+                    self.slots[si] = SlotState(
+                        active=True, request_id=rid,
+                        pos=len(context) if not plan else 0,
+                        prompt_len=len(context), generated=pending,
+                        carried=carried, max_new=t.max_new,
+                        pages=list(page_ids), tier=t.tier,
+                        shared_pages=hits, prompt=t.prompt,
+                        prompt_ids=context, chunks=plan, next_chunk=0,
+                        sample_key=sk)
+                    self.migration_stats["imports"] += 1
+                    self.migration_stats["imported_pages"] += copied
+                    self.migration_stats["import_attach_hits"] += hits
+                    self._note_admission(rid, len(context))
+                    return "ok"
+        # recompute-from-tokens fallback (forbidden or impossible import)
+        status = self._admit_ids(si, rid, context, t.max_new, t.tier,
+                                 t.prompt, carried=carried, pending=pending)
+        if status == "ok":
+            if t.resumes_compute():
+                self.migration_stats["recomputes"] += 1
+            if t.sample_key is not None:
+                self.slots[si].sample_key = t.sample_key
+        return status
 
     # ------------------------------------------------------ chunked prefill
     def _prefill_tick(self):
@@ -552,12 +870,14 @@ class PagedContinuousBatcher(_BatcherBase):
                 # readable (late attaches depend on this ordering)
                 self.pool.register_prefix(dst, s.tier, chash, fill)
         if s.next_chunk == len(s.chunks):
-            # prompt complete: the boundary logits are the first token
-            off = (s.prompt_len - 1) - group[0][0] * self.page_size
-            tok0 = int(jnp.argmax(logits[0, off]))
             s.pos = s.prompt_len
-            s.generated = [tok0]
-            self._note_first_token(s.request_id)
+            if not s.generated:
+                # prompt complete: the boundary logits are the first token
+                # (resumed requests already hold their pending token and
+                # skip this — their stream continues, it doesn't restart)
+                off = (s.prompt_len - 1) - group[0][0] * self.page_size
+                s.generated = [int(jnp.argmax(logits[0, off]))]
+                self._note_first_token(s.request_id)
         return gtok
 
     def _dispatch_chunks(self, si, group):
@@ -595,6 +915,31 @@ class PagedContinuousBatcher(_BatcherBase):
         self.stats["prefill_chunk_tokens"] += fills
         self._note_prefill_dispatch(fills)
         return logits
+
+    # ----------------------------------------------------------- migration
+    def _freeze_slot(self, si) -> MigrationTicket:
+        """Export the slot's live KV pages and evacuate it. Mid-prefill
+        slots travel with their unfinished chunk queue implicitly: the
+        ticket records how many context tokens the exported pages cover,
+        and the destination rebuilds the remaining chunk plan from the
+        token sequence (chain hashes are content-derived, so they are
+        identical on both sides). Reservations held for undispatched
+        chunks return to the pool — they belong to the plan, and the plan
+        leaves with the request."""
+        s = self.slots[si]
+        ps = self.page_size
+        mid_prefill = s.next_chunk < len(s.chunks)
+        self.reserved -= sum(1 for (j, _h, _f) in s.chunks[s.next_chunk:]
+                             if j >= len(s.pages))
+        kv_tokens = (min(len(s.pages) * ps, s.prompt_len) if mid_prefill
+                     else s.pos)
+        records = export_request(self.pool, list(s.pages), kv_tokens)
+        t = MigrationTicket(**self._resume_fields(s), kv_tokens=kv_tokens,
+                            page_size=ps, pages=records,
+                            phase="prefill" if mid_prefill else "decode")
+        self.block_tables[si] = 0
+        self.slots[si] = SlotState()
+        return t
 
     def prefill_backlog_tokens(self) -> int:
         """Prompt tokens admitted or queued but not yet prefilled — the
@@ -701,7 +1046,15 @@ class PagedContinuousBatcher(_BatcherBase):
             for pid in s.pages:
                 self.pool.decref(pid)
             self.block_tables[victim] = 0
+            # requeue at the head WITH its generation progress: the pages
+            # are gone (that is the point of preemption) but a resume
+            # ticket keeps the tokens already produced, so re-admission
+            # recomputes the context instead of regenerating the output
             self.queue.insert(0, (s.request_id, s.prompt, s.max_new, s.tier))
+            if s.generated or s.carried:
+                self._tickets[s.request_id] = MigrationTicket(
+                    **self._resume_fields(s), phase="queued")
+            self.preempted_rids.append(s.request_id)
             self.slots[victim] = SlotState()
             self.stats["preemptions"] += 1
             for si in list(stalled):
@@ -728,15 +1081,15 @@ class PagedContinuousBatcher(_BatcherBase):
         logits, self.pool.pages = self._decode_all(
             self.params, self.pool.pages, jnp.asarray(toks),
             jnp.asarray(poss), jnp.asarray(bt[:, :n_live]))
-        nxt = self._sample_next(logits)
+        nxt = self._sample_ready(logits, ready)
         self.stats["decode_steps"] += 1
         self.work_clock += len(ready)
         for si in ready:
             s = self.slots[si]
-            s.generated.append(int(nxt[si]))
+            s.generated.append(nxt[si])
             s.pos += 1
             self.stats["decode_tokens"] += 1
-            done = (len(s.generated) >= s.max_new
+            done = (len(s.carried) + len(s.generated) >= s.max_new
                     or s.pos >= self.max_len - 1)
             if done:
                 for pid in s.pages:

@@ -36,12 +36,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import routing_jax as rj
-from repro.core.islands import TIER_CLOUD, TIER_PERSONAL
+from repro.core.islands import (STATUS_DRAINING, STATUS_FAILED,
+                                TIER_CLOUD, TIER_PERSONAL)
+from repro.core.tide import MIGRATION_TOKENS_PER_UNIT
 from repro.core.waves import Decision, Request
 from repro.data.tokenizer import ByteTokenizer
 from repro.models.model import get_model
 from repro.models.steps import make_prefill_step, make_serve_step
 from repro.serving.kvpool import trust_tier_for_sensitivity
+from repro.serving.migration import MigrationTicket, ticket_fits
 
 
 @dataclass
@@ -54,6 +57,9 @@ class Response:
     sanitized: bool
     decision: Decision
     tokens: Optional[list] = None
+    # the serving island's declared privacy, snapshotted at completion so
+    # accounting survives the island deregistering later (churn)
+    island_privacy: Optional[float] = None
 
 
 class LocalModelServer:
@@ -152,7 +158,7 @@ class InferenceEngine:
                         latency_ms=island.latency_ms + exec_ms,
                         cost=island.cost_per_request,
                         sensitivity=d.sensitivity, sanitized=d.sanitize,
-                        decision=d)
+                        decision=d, island_privacy=island.privacy)
         self.log.append(resp)
         return resp
 
@@ -171,8 +177,16 @@ def aggregate_stats(log, rejected, registry):
     by_island = {}
     for r in log:
         by_island[r.island_id] = by_island.get(r.island_id, 0) + 1
-    viol = sum(1 for r in log
-               if r.sensitivity > registry.get(r.island_id).privacy)
+    # islands may deregister after serving (churn), so the violation check
+    # prefers the privacy snapshotted on the Response at completion and
+    # only falls back to a live registry lookup for older records
+    def _privacy(r):
+        if r.island_privacy is not None:
+            return r.island_privacy
+        if r.island_id in registry:
+            return registry.get(r.island_id).privacy
+        return 0.0       # island gone, no snapshot: count it (fail closed)
+    viol = sum(1 for r in log if r.sensitivity > _privacy(r))
     return {
         "n": n,
         "rejected": len(rejected),
@@ -195,6 +209,12 @@ class PendingRequest:
     req: Request
     max_new_tokens: int
     submitted_at: float        # virtual clock at submission
+    # set while the request is between islands: the frozen in-flight state
+    # a drain evacuated, consumed (and cleared) at the next dispatch, plus
+    # the decision it was originally running under (so the draining source
+    # can finish it if no destination will take it)
+    ticket: Optional[MigrationTicket] = None
+    decision: Optional[Decision] = None
 
 
 class TickOrchestrator:
@@ -225,13 +245,18 @@ class TickOrchestrator:
     """
 
     def __init__(self, waves, registry, batchers=None, seed=0,
-                 decode_ticks_per_tick=4, tick_interval_s=0.05):
+                 decode_ticks_per_tick=4, tick_interval_s=0.05,
+                 migration_token_budget=512):
         self.waves = waves
         self.registry = registry
         self.batchers = batchers or {}
         self.cloud = CloudSimulator(seed)
         self.decode_ticks_per_tick = decode_ticks_per_tick
         self.tick_interval_s = tick_interval_s
+        # context tokens (KV + generated) a single tick may evacuate from
+        # draining islands; the remainder keeps decoding at the source and
+        # moves on later ticks
+        self.migration_token_budget = migration_token_budget
         self.pending: list[PendingRequest] = []
         self.results: dict[int, Optional[Response]] = {}
         self._local_inflight: dict[tuple, tuple] = {}
@@ -241,9 +266,23 @@ class TickOrchestrator:
         self._next_rid = 0
         self._util_sum: dict[str, float] = {}
         self._util_n: dict[str, int] = {}
+        self._draining: dict[str, bool] = {}     # island -> dereg on empty
+        # (island, brid) pairs a drain already tried and failed to place:
+        # they finish at the source and are not re-frozen every tick (the
+        # pin set clears whenever the routable-island set changes, so a
+        # recovering mesh retries them)
+        self._unmovable: set = set()
+        self._last_routable: tuple = ()
         self.tick_stats = {"ticks": 0, "route_calls": 0, "routed": 0,
                            "decode_ticks": 0, "pool_peak": 0,
-                           "admissions": 0, "prefill_dispatches": 0}
+                           "admissions": 0, "prefill_dispatches": 0,
+                           "migrations_started": 0, "migrations": 0,
+                           "recomputes": 0, "pages_shipped": 0,
+                           "restarts": 0, "failovers": 0,
+                           "migration_returns": 0, "islands_drained": 0}
+        hook = getattr(registry, "add_teardown_hook", None)
+        if hook is not None:
+            hook(self._on_island_deregistered)
 
     # --------------------------------------------------------- submission
     def submit(self, req: Request, max_new_tokens=12) -> int:
@@ -267,6 +306,163 @@ class TickOrchestrator:
             self.tick()
             ticks += 1
         return self.results.get(rid)
+
+    # ----------------------------------------------------- island churn
+    def drain_island(self, island_id: str, deregister: bool = False):
+        """Begin graceful evacuation: the island stops taking new work
+        immediately (TIDE reports zero capacity, LIGHTHOUSE discovery
+        excludes it) while each tick freezes up to
+        ``migration_token_budget`` context tokens of its in-flight
+        requests and re-routes them — WAVES picks the destinations, so
+        privacy/cost/latency constraints hold for the move exactly as they
+        did for the original placement. ``deregister=True`` removes the
+        island from the registry once it is empty."""
+        if island_id not in self.registry or island_id in self._draining:
+            return
+        self.registry.set_status(island_id, STATUS_DRAINING)
+        self._draining[island_id] = deregister
+
+    def fail_island(self, island_id: str):
+        """Abrupt island loss (power, network, spot reclaim): batcher
+        state — KV pages, slots, queue — is unrecoverable. Every stranded
+        request requeues for re-routing from its prompt; under greedy
+        decoding the rerun stream is identical to the lost one, so a
+        failure costs work, never correctness, and never loses or
+        double-completes a request."""
+        if island_id not in self.registry:
+            return
+        self.registry.set_status(island_id, STATUS_FAILED)
+        self._draining.pop(island_id, None)
+        self.batchers.pop(island_id, None)
+        self.waves.lighthouse.detach(island_id)
+        n = 0
+        for key in [k for k in self._local_inflight if k[0] == island_id]:
+            p, _d = self._local_inflight.pop(key)
+            p.ticket = None
+            self.pending.append(p)
+            n += 1
+        still = []
+        for item in self._sim_inflight:
+            _ready, p, d, _text, _exec_ms = item
+            if d.island.island_id == island_id:
+                p.ticket = None
+                self.pending.append(p)
+                n += 1
+            else:
+                still.append(item)
+        self._sim_inflight = still
+        self.tick_stats["failovers"] += n
+
+    def _on_island_deregistered(self, island_id: str):
+        """Registry teardown hook: drop the island's batcher and counters;
+        anything still in flight there fails over (defensive — a
+        ``drain_island(deregister=True)`` arrives here already empty)."""
+        self.batchers.pop(island_id, None)
+        self._draining.pop(island_id, None)
+        self._util_sum.pop(island_id, None)
+        self._util_n.pop(island_id, None)
+        for key in [k for k in self._local_inflight if k[0] == island_id]:
+            p, _d = self._local_inflight.pop(key)
+            p.ticket = None
+            self.pending.append(p)
+            self.tick_stats["failovers"] += 1
+
+    def _return_to_source(self, p, t) -> bool:
+        """Hand a frozen request back to its still-draining source to
+        finish there (no destination would or could take it). The pin in
+        ``_unmovable`` stops the next tick from freezing it again."""
+        if t.source in self.batchers and p.decision is not None:
+            p.ticket = None
+            brid = self.batchers[t.source].submit_ticket(t)
+            self._local_inflight[(t.source, brid)] = (p, p.decision)
+            self._unmovable.add((t.source, brid))
+            self.tick_stats["migration_returns"] += 1
+            return True
+        return False
+
+    @staticmethod
+    def _ticket_fits(b, t) -> bool:
+        """Whether a destination batcher can physically hold the resumed
+        context AND every still-owed decode token (WAVES routes on
+        islands, not batcher geometry — a heterogeneous mesh can pick a
+        batcher too small for a context that grew on a bigger one, and a
+        too-small destination would silently truncate the stream). Same
+        predicate the batcher's thaw admission applies."""
+        pool = getattr(b, "pool", None)
+        return ticket_fits(t, b.max_len,
+                           page_size=getattr(b, "page_size", None),
+                           num_pages=pool.num_pages
+                           if pool is not None else None)
+
+    @staticmethod
+    def _import_allowed(island, tier) -> bool:
+        """Raw KV pages may only land on an island at least as trusted as
+        the tier that produced them (island tier 1 = personal = most
+        trusted; KV tier 1 = most sensitive). Untiered KV never ships —
+        those requests always recompute (fail closed)."""
+        return tier is not None and island.tier <= tier
+
+    def _service_draining(self):
+        """One tick's worth of drain progress: freeze in-flight requests
+        off draining islands (budgeted by context tokens) and requeue them
+        with their tickets so this tick's routing pass places them;
+        islands that have emptied finish draining (and deregister if so
+        requested)."""
+        routable_fn = getattr(self.registry, "is_routable", None)
+        routable = tuple(sorted(
+            i.island_id for i in self.registry.all()
+            if routable_fn is None or routable_fn(i.island_id)))
+        if routable != self._last_routable:
+            self._last_routable = routable
+            self._unmovable.clear()      # mesh changed: retry placements
+        budget = self.migration_token_budget
+        for iid in list(self._draining):
+            b = self.batchers.get(iid)
+            if b is not None:
+                for key in [k for k in self._local_inflight
+                            if k[0] == iid]:
+                    if budget <= 0:
+                        break
+                    if key in self._unmovable:
+                        continue     # already failed to place: it
+                                     # finishes here, don't churn pages
+                    p, d = self._local_inflight[key]
+                    t = b.freeze_request(key[1])
+                    if t is None:
+                        continue      # already finished: delivered below
+                    self._local_inflight.pop(key)
+                    t.source = iid
+                    p.ticket = t
+                    p.decision = d
+                    self.pending.append(p)
+                    # kv_tokens already counts generated tokens for
+                    # decode-phase freezes; the max covers mid-prefill
+                    # (partial KV) and still-queued (nothing yet) tickets
+                    budget -= max(t.kv_tokens, len(t.generated), 1)
+                    self.tick_stats["migrations_started"] += 1
+
+    def _finalize_drains(self):
+        """End-of-tick drain completion check (after deliveries, so the
+        tick that finishes an island's last request also finishes its
+        drain)."""
+        for iid in list(self._draining):
+            b = self.batchers.get(iid)
+            empty = ((b is None or not b.busy())
+                     and not any(k[0] == iid for k in self._local_inflight)
+                     # tickets frozen off this island but not yet placed
+                     # still need it as their return-to-source fallback —
+                     # deregistering now could drop them
+                     and not any(p.ticket is not None
+                                 and p.ticket.source == iid
+                                 for p in self.pending)
+                     and not any(d.island.island_id == iid
+                                 for _r, _p, d, _t, _e
+                                 in self._sim_inflight))
+            if empty:
+                dereg = self._draining.pop(iid)
+                self.tick_stats["islands_drained"] += 1
+                if dereg:
+                    self.registry.deregister(iid)
 
     # ------------------------------------------------------------ routing
     def route_pool(self, reqs: list) -> list:
@@ -295,6 +491,12 @@ class TickOrchestrator:
                    else waves.mist.analyze(p.req.query).score)
             live.append((idx, s_r))
         islands = waves.lighthouse.get_islands()
+        # a crashed LIGHTHOUSE serves its cached list unfiltered; drop
+        # draining/failed islands here so the batched kernel can never
+        # route onto them (the scalar path rejects them via TIDE.admits)
+        routable = getattr(self.registry, "is_routable", None)
+        if routable is not None:
+            islands = [i for i in islands if routable(i.island_id)]
         if not live:
             return decisions
         if not islands:
@@ -382,10 +584,18 @@ class TickOrchestrator:
         """One scheduling tick; returns the Responses completed in it."""
         waves = self.waves
         completed: list[Response] = []
+        self._service_draining()
         pool, self.pending = self.pending, []
         if pool:
             for p, d in zip(pool, self._route_pool(pool)):
                 if not d.accepted:
+                    # nowhere to migrate: the draining source keeps it
+                    # and finishes it under its original decision
+                    # (draining islands finish what nobody can take — a
+                    # graceful drain never drops in-flight work)
+                    if p.ticket is not None \
+                            and self._return_to_source(p, p.ticket):
+                        continue
                     self.rejected.append(d)
                     self.results[p.rid] = None
                     continue
@@ -394,14 +604,54 @@ class TickOrchestrator:
                 query = (d.sanitized_history[-1] if d.sanitize
                          else p.req.query)
                 b = self.batchers.get(island.island_id)
+                tkt, p.ticket = p.ticket, None
+                if tkt is not None and tkt.prompt != query:
+                    # the new island sanitizes differently: nothing
+                    # computed for the old text is reusable (fail closed)
+                    self.tick_stats["restarts"] += 1
+                    tkt = None
                 if b is not None:
-                    # KV pages this request produces carry its MIST trust
-                    # tier; prefix sharing is only legal within a tier
-                    brid = b.submit(query, p.max_new_tokens,
-                                    trust_tier=trust_tier_for_sensitivity(
-                                        d.sensitivity))
+                    if tkt is not None and not self._ticket_fits(b, tkt):
+                        # routed to a batcher too small for the resumed
+                        # context: prefer finishing at the source; failing
+                        # that, restart here from the prompt alone
+                        if self._return_to_source(p, tkt):
+                            continue
+                        self.tick_stats["restarts"] += 1
+                        tkt = None
+                    if tkt is not None:
+                        if (tkt.pages or tkt.dense is not None) and \
+                                not self._import_allowed(island, tkt.tier):
+                            # destination tier may not receive raw KV
+                            # (page records OR a dense cache row): keep
+                            # the progress, recompute the context
+                            tkt = tkt.without_pages()
+                        brid = b.submit_ticket(tkt)
+                        # drain pressure: thawing a context is real work
+                        # for the destination (page copies or a recompute
+                        # prefill — both scale with the context length) —
+                        # charge it so subsequent migrations spread
+                        # instead of dogpiling
+                        waves.tide.add_load(
+                            island.island_id,
+                            len(tkt.context_ids())
+                            / MIGRATION_TOKENS_PER_UNIT)
+                    else:
+                        # KV pages this request produces carry its MIST
+                        # trust tier; prefix sharing is only legal within
+                        # a tier
+                        brid = b.submit(
+                            query, p.max_new_tokens,
+                            trust_tier=trust_tier_for_sensitivity(
+                                d.sensitivity))
                     self._local_inflight[(island.island_id, brid)] = (p, d)
                 else:
+                    # simulated executor: a cross-executor move cannot
+                    # preserve a KV stream, so a migrated request restarts
+                    # here (counted — the bit-exact guarantee is SHORE-to-
+                    # SHORE)
+                    if tkt is not None:
+                        self.tick_stats["restarts"] += 1
                     text, exec_ms = self.cloud.complete(island, query)
                     ready = waves.tide.clock + \
                         (island.latency_ms + exec_ms) / 1000.0
@@ -448,6 +698,9 @@ class TickOrchestrator:
                     kv_pool.telemetry(), prefill_backlog=backlog,
                     prefix_tokens_skipped=b.stats.get(
                         "prefix_tokens_skipped", 0)))
+            mig = getattr(b, "migration_stats", None)
+            if mig is not None and any(mig.values()):
+                waves.lighthouse.report_migration(iid, mig)
         # admission vs prefill-dispatch counts (chunked prefill makes the
         # two diverge: one admission may dispatch many chunks — or none)
         self.tick_stats["admissions"] = sum(
@@ -455,11 +708,21 @@ class TickOrchestrator:
         self.tick_stats["prefill_dispatches"] = sum(
             b.stats.get("prefill_dispatches", 0)
             for b in self.batchers.values())
+        # migration outcome totals (live batchers only; failed islands'
+        # counters died with them, which is the honest accounting)
+        for k, src in (("migrations", "imports"), ("recomputes",
+                       "recomputes"), ("pages_shipped", "imported_pages")):
+            self.tick_stats[k] = sum(
+                getattr(b, "migration_stats", {}).get(src, 0)
+                for b in self.batchers.values())
         # advance virtual time
         waves.tide.advance(self.tick_interval_s)
         waves.lighthouse.advance(self.tick_interval_s)
         for isl in self.registry.all():
-            waves.lighthouse.heartbeat(isl.island_id)
+            # a failed island is dead hardware: no heartbeat (draining
+            # islands still beat — they are alive, just not routable)
+            if self.registry.status(isl.island_id) != STATUS_FAILED:
+                waves.lighthouse.heartbeat(isl.island_id)
         # HORIZON / simulated completions whose latency has elapsed
         still = []
         for ready, p, d, text, exec_ms in self._sim_inflight:
@@ -471,6 +734,7 @@ class TickOrchestrator:
             else:
                 still.append((ready, p, d, text, exec_ms))
         self._sim_inflight = still
+        self._finalize_drains()
         self.tick_stats["ticks"] += 1
         return completed
 
@@ -486,7 +750,7 @@ class TickOrchestrator:
                         latency_ms=latency,
                         cost=d.island.cost_per_request,
                         sensitivity=d.sensitivity, sanitized=d.sanitize,
-                        decision=d)
+                        decision=d, island_privacy=d.island.privacy)
         self.log.append(resp)
         self.results[p.rid] = resp
         return resp
@@ -518,6 +782,13 @@ class TickOrchestrator:
             s["kv_pools"] = pools
             s["prefill_backlog"] = \
                 self.waves.lighthouse.mesh_prefill_backlog()
+        mig = self.waves.lighthouse.migration_telemetry()
+        if mig:
+            s["migration"] = self.waves.lighthouse.mesh_migration_stats()
+        status = getattr(self.registry, "status", None)
+        if status is not None:
+            s["island_status"] = {i.island_id: status(i.island_id)
+                                  for i in self.registry.all()}
         return s
 
 

@@ -42,6 +42,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.serving.migration import PageRecord
+
 SCRATCH_PAGE = 0
 
 
@@ -144,6 +146,33 @@ def _copy_page(pages, src, dst):
     return jax.tree.map(one, pages)
 
 
+def _set_page(pages, data, dst):
+    """dst page := ``data`` (one exported page's leaves, positional —
+    the migration-import write)."""
+    p_leaves, p_def = jax.tree.flatten(pages)
+    out = []
+    for p, d in zip(p_leaves, data):
+        d = jnp.asarray(d).astype(p.dtype)
+        axis = 0 if p.ndim == 4 else 1
+        out.append(jax.lax.dynamic_update_index_in_dim(p, d, dst, axis))
+    return jax.tree.unflatten(p_def, out)
+
+
+def _set_pages(pages, data, dst):
+    """Batched ``_set_page``: scatter k exported pages in ONE dispatch.
+    ``data`` leaves are stacked page-major — (k, ps, Hkv, D) for 4-d pool
+    leaves, (k, G, ps, Hkv, D) for scanned layer groups."""
+    p_leaves, p_def = jax.tree.flatten(pages)
+    out = []
+    for p, d in zip(p_leaves, data):
+        d = jnp.asarray(d).astype(p.dtype)
+        if p.ndim == 4:
+            out.append(p.at[dst].set(d))
+        else:
+            out.append(p.at[:, dst].set(jnp.moveaxis(d, 0, 1)))
+    return jax.tree.unflatten(p_def, out)
+
+
 # ---------------------------------------------------------------- the pool
 
 @dataclass
@@ -182,16 +211,21 @@ class PagePool:
         self._prefix_index: dict[tuple, int] = {}
         self.stats = {"allocs": 0, "frees": 0, "share_hits": 0,
                       "share_misses": 0, "cow_copies": 0, "blocked": 0,
-                      "peak_in_use": 0}
+                      "peak_in_use": 0, "exported_pages": 0,
+                      "imported_pages": 0, "import_attach_hits": 0,
+                      "import_tier_mismatch": 0, "import_refused": 0}
         self.pages = None
         self._write_pages_fn = None
         self._copy_page_fn = None
+        self._set_page_fn = None
         if model is not None:
             spec = model.cache_spec(1, max_len)
             self.pages = self._build_pages(spec, dtype)
             self._write_pages_fn = jax.jit(
                 partial(_write_pages, ps=page_size), donate_argnums=(0,))
             self._copy_page_fn = jax.jit(_copy_page, donate_argnums=(0,))
+            self._set_page_fn = jax.jit(_set_page, donate_argnums=(0,))
+            self._set_pages_fn = jax.jit(_set_pages, donate_argnums=(0,))
 
     def _build_pages(self, spec, dtype):
         def _is_sa(v):
@@ -325,6 +359,45 @@ class PagePool:
         self.pages = self._write_pages_fn(self.pages, dense_cache,
                                           jnp.asarray(ids))
 
+    def read_page(self, pid: int):
+        """One page's K/V content as a positional list of host arrays
+        (None on accounting-only pools) — the migration-export read."""
+        if self.pages is None:
+            return None
+        return [np.asarray(p[pid] if p.ndim == 4 else p[:, pid])
+                for p in jax.tree.leaves(self.pages)]
+
+    def read_pages(self, pids):
+        """Batched ``read_page``: ONE gather + host transfer per cache
+        leaf for the whole list (the per-record views share the stacked
+        buffers). Returns one leaf list per page id."""
+        if not pids:
+            return []
+        if self.pages is None:
+            return [None] * len(pids)
+        idx = jnp.asarray(pids, jnp.int32)
+        stacked = [np.asarray(p[idx] if p.ndim == 4
+                              else jnp.moveaxis(p[:, idx], 1, 0))
+                   for p in jax.tree.leaves(self.pages)]
+        return [[leaf[n] for leaf in stacked] for n in range(len(pids))]
+
+    def write_page(self, pid: int, data):
+        """Overwrite one page from an exported record's leaf list."""
+        assert pid != SCRATCH_PAGE
+        self.pages = self._set_page_fn(self.pages, tuple(data),
+                                       jnp.int32(pid))
+
+    def write_pages(self, pids, datas):
+        """Batched ``write_page``: scatter a whole import in ONE jitted
+        dispatch (``datas`` is one exported leaf list per page)."""
+        if not pids:
+            return
+        assert SCRATCH_PAGE not in pids
+        stacked = tuple(np.stack([d[i] for d in datas])
+                        for i in range(len(datas[0])))
+        self.pages = self._set_pages_fn(self.pages, stacked,
+                                        jnp.asarray(pids, jnp.int32))
+
     # ------------------------------------------------------------ telemetry
     def telemetry(self) -> dict:
         return {
@@ -341,18 +414,154 @@ class PagePool:
             "cow_copies": self.stats["cow_copies"],
             "blocked": self.stats["blocked"],
             "sharing_enabled": self.sharing_enabled,
+            "exported_pages": self.stats["exported_pages"],
+            "imported_pages": self.stats["imported_pages"],
+            "import_attach_hits": self.stats["import_attach_hits"],
+            "import_tier_mismatch": self.stats["import_tier_mismatch"],
         }
 
     # ------------------------------------------------------------ invariants
-    def check(self):
-        """Structural invariants (used by the property tests)."""
+    def audit(self):
+        """Full invariant sweep (the property tests' oracle):
+
+        * the free list holds each page at most once, every listed page has
+          refcount 0, and no freed page keeps metadata or an index entry;
+        * refcount conservation: live pages == lifetime allocs - frees, so
+          no export/import/COW/free interleaving can leak a page or free
+          one twice without tripping here;
+        * the scratch page is permanently pinned (refcount exactly 1);
+        * the prefix index and page metadata agree both ways, and every
+          index entry's tier matches its page's tier tag — a cross-tier
+          entry (a migrated page landing in a foreign tier's index) is
+          structurally impossible and asserted anyway.
+        """
         assert len(set(self._free)) == len(self._free), "free list dup"
         for pid in self._free:
-            assert self.refcount[pid] == 0
+            assert self.refcount[pid] == 0, f"free page {pid} has refs"
+            meta = self._meta[pid]
+            assert meta.tier is None and meta.key is None, \
+                f"free page {pid} kept metadata"
         live = self.in_use()
         assert live == sum(1 for p in range(1, self.num_pages)
                            if self.refcount[p] > 0)
+        assert live == self.stats["allocs"] - self.stats["frees"], \
+            "refcount conservation broken (leak or double free)"
+        assert self.refcount[SCRATCH_PAGE] == 1, "scratch page unpinned"
         for key, pid in self._prefix_index.items():
             assert self.refcount[pid] > 0, "index points at freed page"
+            assert self._meta[pid].key == key, "index/meta disagree"
             assert self._meta[pid].tier == key[0], "cross-tier index entry"
+        for pid, meta in self._meta.items():
+            if meta.key is not None:
+                assert self._prefix_index.get(meta.key) == pid, \
+                    f"page {pid} claims an index key it doesn't hold"
         return True
+
+    def check(self):
+        """Back-compat alias for :meth:`audit`."""
+        return self.audit()
+
+
+# ----------------------------------------------------- migration (export)
+
+def export_request(pool: PagePool, page_ids, kv_tokens: int,
+                   detach: bool = True):
+    """Serialize one request's live pages for cross-island migration.
+
+    Returns one ``PageRecord`` per page, in block-table order: the page's
+    trust tier, its prefix-index key when it holds a registered full
+    prompt-prefix chunk (so the destination can re-attach by chain hash
+    instead of copying bytes), its fill level within the request's
+    ``kv_tokens`` context, and the page content (None on accounting-only
+    pools). ``detach=True`` (the default) decrefs every page afterwards —
+    the request has LEFT this pool; shared pages survive under their other
+    referents, private pages free immediately.
+    """
+    ps = pool.page_size
+    datas = pool.read_pages(list(page_ids))
+    records = []
+    for n, pid in enumerate(page_ids):
+        meta = pool._meta[pid]
+        fill = max(0, min(ps, kv_tokens - n * ps))
+        records.append(PageRecord(tier=meta.tier, key=meta.key, fill=fill,
+                                  data=datas[n]))
+    if detach:
+        for pid in page_ids:
+            pool.decref(pid)
+    pool.stats["exported_pages"] += len(records)
+    return records
+
+
+def import_request(pool: PagePool, records, tier: Optional[int]):
+    """Materialize exported pages in this pool, all-or-nothing.
+
+    Per record: a prefix-keyed page first probes the destination's OWN
+    prefix index through the tier-keyed ``lookup_prefix`` — a hit means
+    this pool already holds identical K/V at the request's exact tier, so
+    the page re-attaches (increfed, zero bytes shipped). Everything else
+    deep-copies into a freshly allocated page tagged with the record's
+    tier and, when keyed, registers in the index for future sharers.
+
+    Fail-closed rules, enforced here so no caller can launder trust:
+    untiered requests never import (``tier is None`` -> recompute path);
+    a record whose tier differs from the request's refuses the WHOLE
+    import; a pool that stores real K/V refuses records without data.
+    Pool exhaustion mid-import rolls everything back. Returns
+    ``(page_ids, copied, attach_hits)`` or None (caller must fall back to
+    recompute-from-tokens).
+    """
+    if tier is None:
+        pool.stats["import_refused"] += 1
+        return None
+    for rec in records:
+        if rec.tier != tier:
+            pool.stats["import_tier_mismatch"] += 1
+            pool.stats["import_refused"] += 1
+            return None
+    hits0 = pool.stats["share_hits"]
+    miss0 = pool.stats["share_misses"]
+    got: list[tuple[int, bool]] = []
+    copies: list[tuple[int, PageRecord]] = []
+
+    def rollback():
+        for pid, _ in got:
+            pool.decref(pid)
+        pool.stats["share_hits"] = hits0
+        pool.stats["share_misses"] = miss0
+        pool.stats["import_refused"] += 1
+        return None
+
+    for rec in records:
+        # re-attach only when the page holds EXACTLY the registered chunk:
+        # a tail page the source kept appending decode tokens to carries
+        # content past the key's fill that the hash does not commit to, so
+        # a destination index hit only guarantees the first key-fill
+        # tokens — attaching would graft someone else's (or stale) KV at
+        # the positions beyond. Mutated partials always deep-copy.
+        if rec.key is not None and rec.fill == rec.key[2]:
+            hit = pool.lookup_prefix(*rec.key)
+            if hit is not None:
+                pool.incref(hit)
+                got.append((hit, True))
+                continue
+        if pool.pages is not None and rec.data is None:
+            return rollback()        # no bytes to materialize
+        pid = pool.alloc(rec.tier)
+        if pid is None:
+            return rollback()        # exhausted: caller recomputes
+        got.append((pid, False))
+        copies.append((pid, rec))
+    # the whole import is decided: materialize every copied page in ONE
+    # fused scatter, registering strictly AFTER the write (hits must
+    # always be readable)
+    if pool.pages is not None and copies:
+        pool.write_pages([pid for pid, _ in copies],
+                         [rec.data for _, rec in copies])
+    for pid, rec in copies:
+        if rec.key is not None:
+            pool.register_prefix(pid, *rec.key)
+    attach_hits = sum(1 for _, a in got if a)
+    copied = len(copies)
+    pool.stats["imported_pages"] += copied
+    pool.stats["import_attach_hits"] += attach_hits
+    return [pid for pid, _ in got], copied, attach_hits

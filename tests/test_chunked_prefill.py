@@ -240,6 +240,78 @@ def test_reserved_pages_cannot_livelock_lone_decoder(cfg):
 
 # ------------------------------------------------- scheduling + telemetry
 
+def test_round_robin_rotates_under_adversarial_admission_order(cfg):
+    """PR-4 coverage gap: the ROTATING round-robin pointer. Longest
+    prompts admitted first (the adversarial order) with a one-chunk
+    budget: every tick serves exactly one slot, and no pending slot is
+    served twice before every other pending slot was served once — so
+    dispatched-chunk counts stay within one of each other and admission
+    order cannot starve the shorter prompts."""
+    from repro.serving.batcher import PagedContinuousBatcher
+    b = PagedContinuousBatcher(cfg, num_slots=3, max_len=96, page_size=16,
+                               prefill_token_budget=16, sharing=False)
+    rids = [b.submit("L" * 70, max_new_tokens=3, trust_tier=2),  # 5 chunks
+            b.submit("M" * 54, max_new_tokens=3, trust_tier=2),  # 4 chunks
+            b.submit("s" * 38, max_new_tokens=3, trust_tier=2)]  # 3 chunks
+    serves = [0, 0, 0]              # plan entries dispatched per slot
+    spread_while_contended = []
+    while b.busy() and b.stats["ticks"] < 100:
+        before = [b.slots[si].next_chunk if b.slots[si].active else None
+                  for si in range(3)]
+        all_pending = all(
+            before[si] is not None
+            and before[si] < len(b.slots[si].chunks) for si in range(3))
+        b.tick()
+        for si in range(3):
+            if before[si] is not None and b.slots[si].active:
+                serves[si] += b.slots[si].next_chunk - before[si]
+        if all_pending:
+            spread_while_contended.append(max(serves) - min(serves))
+    assert spread_while_contended, "budget never spread prefill over ticks"
+    # while every slot still had pending chunks, no slot ever got more
+    # than one dispatch ahead of any other — the rotation cannot starve
+    assert max(spread_while_contended) <= 1, spread_while_contended
+    # ... so the short prompt admitted LAST still reaches its first token
+    # no later than the adversarially-front-loaded longest one
+    done = b.run_until_done()
+    assert all(done[r] for r in rids)
+    ft = [b.request_log[r]["first_token_tick"] for r in rids]
+    assert ft[2] <= ft[0]
+    assert b.pool.in_use() == 0 and b.pool.audit()
+
+
+def test_preemption_victim_least_invested_among_prefillers(cfg):
+    """PR-4 coverage gap: victim selection with SEVERAL mid-prefill slots.
+    A decoder stalls on page exhaustion while two other slots are
+    mid-prefill with unequal progress; the victim must be the
+    least-invested prefiller (NOT the decoder, NOT the further-along
+    prefiller), and everything still completes."""
+    from repro.serving.batcher import PagedContinuousBatcher
+    # 11 usable pages: A(2 pages) + B(1st of 5) + C(1st of 4) dispatched
+    # by the tick A finishes prefill; A's first decode write then sees
+    # free(7) == reserved(7) and stalls
+    b = PagedContinuousBatcher(cfg, num_slots=3, max_len=96, page_size=16,
+                               num_pages=12, sharing=False,
+                               prefill_token_budget=16)
+    ra = b.submit("a" * 31, max_new_tokens=3, trust_tier=2)   # 2 exact pages
+    rb = b.submit("B" * 70, max_new_tokens=3, trust_tier=2)   # 5 chunks
+    rc = b.submit("C" * 54, max_new_tokens=3, trust_tier=2)   # 4 chunks
+    done = b.run_until_done(max_ticks=300)
+    assert b.stats["ticks"] < 300, "spun to the tick cap"
+    assert b.stats["preemptions"] >= 1
+    # the first victim is a mid-prefill slot, and the least-invested one
+    assert b.preempted_rids[0] == rb
+    assert sorted(done) == sorted([ra, rb, rc])
+    assert all(done[r] is not None for r in (ra, rb, rc))
+    assert b.pool.in_use() == 0 and b.reserved == 0 and b.pool.audit()
+    # preserved-output invariant: the preempted request's rerun matches an
+    # unpressured run of the same prompt
+    roomy = PagedContinuousBatcher(cfg, params=b.params, num_slots=3,
+                                   max_len=96, page_size=16, sharing=False)
+    r2 = roomy.submit("B" * 70, max_new_tokens=3, trust_tier=2)
+    assert roomy.run_until_done()[r2] == done[rb]
+
+
 def test_prefill_budget_bounds_tokens_per_tick(cfg):
     """No tick may dispatch more prefill tokens than the budget (plus one
     overshooting chunk), and decode proceeds while a long prompt is still

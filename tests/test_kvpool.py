@@ -17,9 +17,22 @@ def test_alloc_free_roundtrip():
     assert None not in pids and len(set(pids)) == 7
     assert p.alloc(tier=1) is None          # exhausted, not an error
     assert p.stats["blocked"] == 1
+    p.audit()
     for pid in pids:
         p.decref(pid)
-    assert p.in_use() == 0 and p.check()
+    assert p.in_use() == 0 and p.audit()
+
+
+def test_audit_catches_tampered_accounting():
+    """Positive control for the invariant checker: a fabricated free (the
+    signature of a leak/double-free bug) must trip the refcount
+    conservation assert."""
+    p = PagePool(num_pages=4)
+    p.alloc(tier=1)
+    p.audit()
+    p.stats["frees"] += 1
+    with pytest.raises(AssertionError, match="conservation"):
+        p.audit()
 
 
 def test_double_free_is_an_error():
@@ -62,7 +75,7 @@ def test_alloc_free_never_leaks_or_double_frees(ops, num_pages):
                 live[pid] -= 1
                 if live[pid] == 0:
                     del live[pid]
-        p.check()
+        p.audit()
     assert p.in_use() == len(live)
     assert sum(live.values()) == sum(int(p.refcount[q])
                                      for q in range(1, num_pages))

@@ -1,0 +1,713 @@
+"""Live cross-island request migration + island-churn fault injection.
+
+The invariants under test:
+
+* **Bit-exactness** — a request frozen at ANY boundary (still queued,
+  mid-prefill at every chunk boundary, mid-decode at every token) and
+  thawed elsewhere produces exactly the token stream a no-churn run
+  produces, whether the thaw imported KV pages or recomputed the context.
+* **No loss, no double-completion** — island kills and drains never strand
+  a request: every submitted rid resolves exactly once.
+* **Trust is never laundered** — refcounts are conserved across arbitrary
+  export/import/free interleavings, imported pages keep their tier and can
+  only re-attach within it, untiered requests always recompute, and a
+  destination island whose tier may not receive raw KV gets a recompute,
+  not pages.
+* **Teardown is complete** — deregistering an island leaves no dangling
+  TIDE load state, LIGHTHOUSE liveness/telemetry, or orchestrator batcher.
+"""
+import numpy as np
+import pytest
+
+from _hypothesis_shim import given, settings, st
+
+from repro.configs.base import get_config
+from repro.core.islands import (IslandRegistry, STATUS_ACTIVE,
+                                STATUS_DRAINING, STATUS_FAILED,
+                                edge_island, personal_island)
+from repro.core.lighthouse import Lighthouse
+from repro.core.mist import MIST
+from repro.core.tide import TIDE
+from repro.core.waves import WAVES, Policy, Request
+from repro.serving.kvpool import (PagePool, export_request, import_request,
+                                  prefix_chunk_hashes)
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("smollm-135m").reduced()
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    from repro.models.model import get_model
+    import jax
+    return get_model(cfg).init(jax.random.PRNGKey(0), "float32")
+
+
+# ------------------------------------------------- batcher-level freeze/thaw
+
+PROMPTS = ["a somewhat longer request that spans multiple pages here",
+           "short one"]
+
+
+def _baseline(cfg, params, prefill="chunked", budget=16):
+    from repro.serving.batcher import PagedContinuousBatcher
+    b = PagedContinuousBatcher(cfg, params=params, num_slots=2, max_len=96,
+                               page_size=16, prefill=prefill,
+                               prefill_token_budget=budget)
+    rids = [b.submit(p, max_new_tokens=5, trust_tier=2) for p in PROMPTS]
+    done = b.run_until_done()
+    return [done[r] for r in rids]
+
+
+def test_freeze_thaw_bitexact_at_every_boundary(cfg, params):
+    """Freeze after k source ticks for EVERY k until completion — that
+    sweeps queued, every prefill chunk boundary (budget = one chunk) and
+    every decode token — thaw on a fresh island, and require the combined
+    streams to equal the no-churn run. Pools end empty and audited on
+    both sides."""
+    from repro.serving.batcher import PagedContinuousBatcher
+    base = _baseline(cfg, params)
+    k = 0
+    saw_phases = set()
+    while True:
+        a = PagedContinuousBatcher(cfg, params=params, num_slots=2,
+                                   max_len=96, page_size=16,
+                                   prefill_token_budget=16)
+        b = PagedContinuousBatcher(cfg, params=params, num_slots=2,
+                                   max_len=96, page_size=16,
+                                   prefill_token_budget=16)
+        rids = [a.submit(p, max_new_tokens=5, trust_tier=2)
+                for p in PROMPTS]
+        for _ in range(k):
+            a.tick()
+        moved = {}
+        for rid in rids:
+            if rid in a.finished:
+                continue
+            t = a.freeze_request(rid)
+            assert t is not None
+            saw_phases.add(t.phase)
+            moved[rid] = b.submit_ticket(t)
+        a.run_until_done()
+        b.run_until_done()
+        out = [b.finished[moved[r]] if r in moved else a.finished[r]
+               for r in rids]
+        assert out == base, f"stream diverged at boundary k={k}"
+        for pool in (a.pool, b.pool):
+            assert pool.audit() and pool.in_use() == 0
+        assert a.reserved == 0 and b.reserved == 0
+        if not moved:          # everything finished before the freeze
+            break
+        k += 1
+    assert k > 3
+    assert saw_phases >= {"queued", "prefill", "decode"}
+
+
+def test_freeze_thaw_full_prefill_mode(cfg, params):
+    """Monolithic-admission batchers migrate too (recompute thaw)."""
+    from repro.serving.batcher import PagedContinuousBatcher
+    base = _baseline(cfg, params, prefill="full")
+    for k in (0, 1, 3):
+        a = PagedContinuousBatcher(cfg, params=params, num_slots=2,
+                                   max_len=96, page_size=16,
+                                   prefill="full")
+        b = PagedContinuousBatcher(cfg, params=params, num_slots=2,
+                                   max_len=96, page_size=16,
+                                   prefill="full")
+        rids = [a.submit(p, max_new_tokens=5, trust_tier=2)
+                for p in PROMPTS]
+        for _ in range(k):
+            a.tick()
+        moved = {r: b.submit_ticket(a.freeze_request(r)) for r in rids
+                 if r not in a.finished}
+        a.run_until_done()
+        b.run_until_done()
+        out = [b.finished[moved[r]] if r in moved else a.finished[r]
+               for r in rids]
+        assert out == base, f"full-prefill stream diverged at k={k}"
+        assert a.pool.in_use() == 0 == b.pool.in_use()
+        assert a.pool.audit() and b.pool.audit()
+
+
+def test_freeze_thaw_stacked_dense_row(cfg, params):
+    """The stacked cache manager freezes mid-decode by shipping its dense
+    cache row; thawing restores the identical stream (import path), and a
+    mismatched destination (different max_len) recomputes instead."""
+    from repro.serving.batcher import ContinuousBatcher
+    b0 = ContinuousBatcher(cfg, params=params, num_slots=2, max_len=96)
+    rids0 = [b0.submit(p, max_new_tokens=5) for p in PROMPTS]
+    done0 = b0.run_until_done()
+    base = [done0[r] for r in rids0]
+
+    for dst_len, expect_import in ((96, True), (64, False)):
+        a = ContinuousBatcher(cfg, params=params, num_slots=2, max_len=96)
+        b = ContinuousBatcher(cfg, params=params, num_slots=2,
+                              max_len=dst_len)
+        rids = [a.submit(p, max_new_tokens=5) for p in PROMPTS]
+        for _ in range(2):
+            a.tick()
+        moved = {r: b.submit_ticket(a.freeze_request(r)) for r in rids
+                 if r not in a.finished}
+        a.run_until_done()
+        b.run_until_done()
+        out = [b.finished[moved[r]] if r in moved else a.finished[r]
+               for r in rids]
+        assert out == base
+        if expect_import:
+            assert b.migration_stats["imports"] == len(moved) > 0
+        else:
+            assert b.migration_stats["recomputes"] == len(moved) > 0
+
+
+def test_untiered_request_always_recomputes(cfg, params):
+    """Untiered KV (trust_tier=None) never ships pages: the thaw must go
+    through recompute, and the stream still matches."""
+    from repro.serving.batcher import PagedContinuousBatcher
+    b0 = PagedContinuousBatcher(cfg, params=params, num_slots=1,
+                                max_len=96, page_size=16)
+    r0 = b0.submit(PROMPTS[0], max_new_tokens=5, trust_tier=None)
+    base = b0.run_until_done()[r0]
+    a = PagedContinuousBatcher(cfg, params=params, num_slots=1, max_len=96,
+                               page_size=16)
+    b = PagedContinuousBatcher(cfg, params=params, num_slots=1, max_len=96,
+                               page_size=16)
+    rid = a.submit(PROMPTS[0], max_new_tokens=5, trust_tier=None)
+    for _ in range(3):
+        a.tick()
+    nr = b.submit_ticket(a.freeze_request(rid))
+    b.run_until_done()
+    assert b.finished[nr] == base
+    assert b.migration_stats["imports"] == 0
+    assert b.migration_stats["recomputes"] == 1
+    assert b.pool.stats["import_refused"] >= 1
+
+
+def test_mutated_tail_page_never_reattaches_by_stale_key(cfg, params):
+    """Regression: a tail page registered for a PARTIAL prompt chunk and
+    then extended in place by decode tokens carries content the chain
+    hash never committed to. Importing it must deep-copy — re-attaching
+    to the destination's same-key page would graft KV that lacks (or
+    contradicts) the migrated request's later tokens. Destination holds a
+    LESS-advanced decode of the identical prompt, so a stale-key attach
+    would leave garbage at the migrated positions."""
+    from repro.serving.batcher import PagedContinuousBatcher
+    prompt = "x" * 19                 # + BOS = 20 tokens: 16 + partial 4
+    b0 = PagedContinuousBatcher(cfg, params=params, num_slots=2,
+                                max_len=96, page_size=16)
+    r0 = b0.submit(prompt, max_new_tokens=10, trust_tier=2)
+    base = b0.run_until_done()[r0]
+
+    a = PagedContinuousBatcher(cfg, params=params, num_slots=2,
+                               max_len=96, page_size=16)
+    b = PagedContinuousBatcher(cfg, params=params, num_slots=2,
+                               max_len=96, page_size=16)
+    rb = b.submit(prompt, max_new_tokens=10, trust_tier=2)
+    for _ in range(2):
+        b.tick()                      # dest: few decode tokens written
+    ra = a.submit(prompt, max_new_tokens=10, trust_tier=2)
+    for _ in range(6):
+        a.tick()                      # source: further along than dest
+    assert len(a.slots[0].generated) > len(b.slots[0].generated) > 0
+    t = a.freeze_request(ra)
+    assert any(r.key is not None and r.fill != r.key[2] for r in t.pages), \
+        "setup failed to produce a decode-mutated partial tail page"
+    nra = b.submit_ticket(t)
+    a.run_until_done()
+    done = b.run_until_done()
+    assert done[nra] == base, "stale-key re-attach corrupted the stream"
+    assert done[rb] == base
+    # the full head page may re-attach; the mutated tail must deep-copy
+    assert b.pool.stats["imported_pages"] >= 1
+    assert b.pool.audit() and b.pool.in_use() == 0
+
+
+def test_preemption_keeps_generated_tokens(cfg):
+    """A preempted mid-decode victim requeues with a resume ticket: its
+    already-generated tokens survive the eviction (re-admission recomputes
+    the context, it does not regenerate the output) and the final stream
+    matches the unpressured run."""
+    from repro.serving.batcher import PagedContinuousBatcher
+    roomy = PagedContinuousBatcher(cfg, num_slots=2, max_len=64,
+                                   page_size=16, sharing=False)
+    prompts = ["a" * 31, "b" * 31]           # 2 exact pages each (with BOS)
+    rids = [roomy.submit(p, max_new_tokens=4, trust_tier=2)
+            for p in prompts]
+    base = roomy.run_until_done()
+    tight = PagedContinuousBatcher(cfg, params=roomy.params, num_slots=2,
+                                   max_len=64, page_size=16, num_pages=5,
+                                   sharing=False)
+    rids2 = [tight.submit(p, max_new_tokens=4, trust_tier=2)
+             for p in prompts]
+    done = tight.run_until_done(max_ticks=200)
+    assert tight.stats["preemptions"] >= 1
+    assert tight.preempted_rids
+    assert [done[r] for r in rids2] == [base[r] for r in rids]
+    assert tight.pool.in_use() == 0 and tight.pool.audit()
+
+
+# ------------------------------------------------ orchestrator fault injection
+
+def _mesh(cfg, params, islands=None):
+    reg = IslandRegistry()
+    for isl in islands or [
+            personal_island("laptop", latency_ms=120, capacity_units=2.0),
+            personal_island("desktop", latency_ms=150, capacity_units=2.0),
+            personal_island("nas", latency_ms=200, capacity_units=2.0)]:
+        reg.register(isl, reg.attestation_token(isl.island_id))
+    mist, tide, lh = MIST(), TIDE(reg), Lighthouse(reg)
+    for i in reg.all():
+        lh.heartbeat(i.island_id)
+    waves = WAVES(mist, tide, lh, Policy())
+    from repro.serving.engine import TickOrchestrator, build_island_batchers
+    bats = build_island_batchers(cfg, reg, cache="paged", max_len=96,
+                                 slots_per_capacity_unit=2.0, params=params)
+    orch = TickOrchestrator(waves, reg, bats, decode_ticks_per_tick=1,
+                            migration_token_budget=256)
+    return reg, tide, lh, orch
+
+
+CHURN_PROMPTS = [f"patient record number {i} with several details attached"
+                 for i in range(6)]
+
+
+def _drive(orch, events=(), max_ticks=400):
+    rids = [orch.submit(Request(query=p, priority="primary",
+                                sensitivity_override=0.3),
+                        max_new_tokens=8) for p in CHURN_PROMPTS]
+    events = dict(events)
+    k = 0
+    while orch.busy() and orch.tick_stats["ticks"] < max_ticks:
+        orch.tick()
+        k += 1
+        if k in events:
+            events.pop(k)()
+    assert not orch.busy(), "run hit the tick cap"
+    return {r: (orch.results[r].text if orch.results.get(r) else None)
+            for r in rids}
+
+
+def test_kill_island_mid_flight_every_boundary(cfg, params):
+    """Fail the busiest island after k orchestrator ticks for every k in
+    the run's span (mid-prefill and mid-decode boundaries included): no
+    request is lost or double-completed and every completed stream is
+    bit-exact vs the no-churn run."""
+    _reg, _tide, _lh, o0 = _mesh(cfg, params)
+    base = _drive(o0)
+    assert all(t is not None for t in base.values())
+    span = o0.tick_stats["ticks"]
+    failovers = 0
+    for k in range(1, min(span, 6) + 1):
+        reg, _tide, _lh, orch = _mesh(cfg, params)
+        out = _drive(orch, events={k: lambda: orch.fail_island("laptop")})
+        assert out == base, f"divergence after kill at tick {k}"
+        assert reg.status("laptop") == STATUS_FAILED
+        failovers += orch.tick_stats["failovers"]
+        # exactly-once: every completion logged once per rid
+        done_rids = [r for r, t in out.items() if t is not None]
+        assert len(orch.log) == len(done_rids)
+        for b in orch.batchers.values():
+            assert b.pool.audit() and b.pool.in_use() == 0
+    assert failovers >= 1, "no kill ever caught work in flight"
+
+
+def test_kill_mid_prefill_with_tiny_budget(cfg, params):
+    """Force the kill to land mid-prefill: a tiny prefill budget spreads
+    prefill over many ticks, the island dies between chunk dispatches, and
+    the rerun elsewhere still matches the no-churn stream."""
+    def mesh():
+        reg, tide, lh, orch = _mesh(cfg, params)
+        for b in orch.batchers.values():
+            b.prefill_token_budget = 16
+            b._chunk_pages_canon = 1
+        return reg, orch
+    _reg, o0 = mesh()
+    base = _drive(o0)
+    reg, orch = mesh()
+    out = _drive(orch, events={2: lambda: orch.fail_island("laptop")})
+    assert out == base
+    assert orch.tick_stats["failovers"] >= 1
+
+
+def test_drain_island_migrates_and_deregisters(cfg, params):
+    """Graceful drain: in-flight work freezes off the island under the
+    migration budget, re-routes through WAVES, resumes bit-exactly; the
+    empty island deregisters and every layer forgets it (the teardown-hook
+    regression test rides along: no dangling TIDE load state, LIGHTHOUSE
+    heartbeat/telemetry/cache, or orchestrator batcher)."""
+    _reg, _t, _l, o0 = _mesh(cfg, params)
+    base = _drive(o0)
+    reg, tide, lh, orch = _mesh(cfg, params)
+    out = _drive(orch,
+                 events={1: lambda: orch.drain_island(
+                     "laptop", deregister=True)})
+    assert out == base
+    assert orch.tick_stats["migrations_started"] >= 1
+    assert orch.tick_stats["islands_drained"] == 1
+    # teardown is complete at every layer
+    assert "laptop" not in reg
+    assert "laptop" not in orch.batchers
+    assert "laptop" not in tide.state
+    assert "laptop" not in lh._last_beat
+    assert "laptop" not in lh.pool_telemetry()
+    assert all(i.island_id != "laptop" for i in lh.get_islands())
+    mig = lh.mesh_migration_stats()
+    assert mig["import_tier_mismatch"] == 0
+    # migrated TTFT is measured on the DESTINATION's clocks: a thaw
+    # re-stamps submit_tick/submit_work, so no record can go negative
+    for b in orch.batchers.values():
+        for rec in b.request_log.values():
+            assert rec.get("ttft_work", 0) >= 0
+            assert rec.get("ttft_ticks", 0) >= 0
+
+
+def test_drain_excludes_island_from_routing_immediately(cfg, params):
+    """A draining island takes no new work even before it empties: TIDE
+    reports zero capacity and discovery drops it, yet it keeps serving
+    what it holds."""
+    reg, tide, lh, orch = _mesh(cfg, params)
+    orch.tick()
+    orch.drain_island("laptop")
+    assert reg.status("laptop") == STATUS_DRAINING
+    assert tide.capacity("laptop") == 0.0
+    assert not tide.admits("laptop", "primary")
+    assert all(i.island_id != "laptop" for i in lh.get_islands())
+    # later submissions route elsewhere
+    rid = orch.submit(Request(query="late arrival", priority="primary",
+                              sensitivity_override=0.3), max_new_tokens=3)
+    while orch.busy() and orch.tick_stats["ticks"] < 300:
+        orch.tick()
+    assert orch.results[rid] is not None
+    assert orch.results[rid].island_id != "laptop"
+
+
+def test_tier_rule_forbids_page_import_downhill(cfg, params):
+    """A tier-1 (most sensitive) request drained toward a tier-2 island
+    must arrive by recompute, never by raw KV-page import — and the stream
+    still matches the no-churn run."""
+    islands = [personal_island("laptop", latency_ms=120,
+                               capacity_units=2.0),
+               edge_island("edge", privacy=0.9, latency_ms=200,
+                           capacity_units=4.0)]
+
+    def drive(churn):
+        reg, tide, lh, orch = _mesh(cfg, params, islands=islands)
+        # secondary (primary is personal-tier-only) at sensitivity 0.85 ->
+        # KV tier 1; prev_privacy matches the edge island so the move
+        # re-uses the SAME query text (no re-sanitization restart) and the
+        # import permission rule is what's actually under test
+        rid = orch.submit(Request(query="summarize my medical history",
+                                  priority="secondary",
+                                  sensitivity_override=0.85,
+                                  prev_privacy=0.9),
+                          max_new_tokens=8)
+        k = 0
+        while orch.busy() and orch.tick_stats["ticks"] < 300:
+            orch.tick()
+            k += 1
+            if churn and k == 2:
+                orch.drain_island("laptop")
+        return orch.results[rid].text, orch, lh
+
+    base, _o, _l = drive(False)
+    text, orch, lh = drive(True)
+    assert text == base
+    edge_b = orch.batchers["edge"]
+    assert edge_b.migration_stats["imports"] == 0
+    assert edge_b.migration_stats["recomputes"] >= 1
+    assert edge_b.pool.stats["imported_pages"] == 0
+    assert lh.mesh_migration_stats()["import_tier_mismatch"] == 0
+
+
+def test_tier_rule_covers_stacked_dense_rows(cfg, params):
+    """Regression: the tier gate must strip a STACKED ticket's dense cache
+    row too, not just paged page records — a tier-1 dense row drained
+    toward a tier-2 island arrives by recompute."""
+    from repro.serving.batcher import make_batcher
+    from repro.serving.engine import TickOrchestrator
+    islands = [personal_island("laptop", latency_ms=120,
+                               capacity_units=2.0),
+               edge_island("edge", privacy=0.9, latency_ms=200,
+                           capacity_units=4.0)]
+    reg = IslandRegistry()
+    for isl in islands:
+        reg.register(isl, reg.attestation_token(isl.island_id))
+    mist, tide, lh = MIST(), TIDE(reg), Lighthouse(reg)
+    for i in reg.all():
+        lh.heartbeat(i.island_id)
+    waves = WAVES(mist, tide, lh, Policy())
+    bats = {iid: make_batcher(cfg, cache="stacked", num_slots=2,
+                              max_len=96, params=params)
+            for iid in ("laptop", "edge")}
+    orch = TickOrchestrator(waves, reg, bats, decode_ticks_per_tick=1,
+                            migration_token_budget=256)
+    rid = orch.submit(Request(query="summarize my medical history",
+                              priority="secondary",
+                              sensitivity_override=0.85,
+                              prev_privacy=0.9), max_new_tokens=8)
+    k = 0
+    while orch.busy() and orch.tick_stats["ticks"] < 300:
+        orch.tick()
+        k += 1
+        if k == 2:
+            orch.drain_island("laptop")
+    assert orch.results[rid] is not None
+    assert bats["edge"].migration_stats["imports"] == 0
+    assert bats["edge"].migration_stats["recomputes"] >= 1
+
+
+def test_drain_with_no_destination_finishes_at_source(cfg, params):
+    """Regression: draining the ONLY eligible island must not drop its
+    in-flight work — with nowhere to migrate, the frozen request returns
+    to the draining source and finishes there, bit-exact."""
+    one = [personal_island("solo", latency_ms=120, capacity_units=2.0)]
+    _r, _t, _l, o0 = _mesh(cfg, params, islands=one)
+    rid0 = o0.submit(Request(query="only island in the mesh",
+                             priority="primary",
+                             sensitivity_override=0.3), max_new_tokens=8)
+    while o0.busy() and o0.tick_stats["ticks"] < 300:
+        o0.tick()
+    base = o0.results[rid0].text
+    reg, tide, lh, orch = _mesh(cfg, params, islands=one)
+    rid = orch.submit(Request(query="only island in the mesh",
+                              priority="primary",
+                              sensitivity_override=0.3), max_new_tokens=8)
+    k = 0
+    while orch.busy() and orch.tick_stats["ticks"] < 300:
+        orch.tick()
+        k += 1
+        if k == 2:
+            orch.drain_island("solo")
+    assert orch.results[rid] is not None, "graceful drain dropped work"
+    assert orch.results[rid].text == base
+    assert orch.tick_stats["migration_returns"] >= 1
+    # the failed placement pins the request to the source: it is frozen
+    # ONCE, not page-churned out and back every remaining tick
+    assert orch.tick_stats["migrations_started"] == 1
+    assert reg.status("solo") == STATUS_DRAINING
+    assert orch.tick_stats["islands_drained"] == 1
+
+
+def test_drain_deregister_same_tick_never_drops_work(cfg, params):
+    """Regression: drain_island(deregister=True) on the only island must
+    NOT deregister in the same tick it froze in-flight work — the frozen
+    ticket still needs the island as its return-to-source fallback. The
+    request finishes at the source and only THEN does the island leave."""
+    one = [personal_island("solo", latency_ms=120, capacity_units=2.0)]
+    _r, _t, _l, o0 = _mesh(cfg, params, islands=one)
+    rid0 = o0.submit(Request(query="lone island deregister drain",
+                             priority="primary",
+                             sensitivity_override=0.3), max_new_tokens=8)
+    while o0.busy() and o0.tick_stats["ticks"] < 300:
+        o0.tick()
+    base = o0.results[rid0].text
+    reg, _tide, _lh, orch = _mesh(cfg, params, islands=one)
+    rid = orch.submit(Request(query="lone island deregister drain",
+                              priority="primary",
+                              sensitivity_override=0.3), max_new_tokens=8)
+    k = 0
+    while orch.busy() and orch.tick_stats["ticks"] < 300:
+        orch.tick()
+        k += 1
+        if k == 2:
+            orch.drain_island("solo", deregister=True)
+    assert orch.results[rid] is not None, "deregister drain dropped work"
+    assert orch.results[rid].text == base
+    assert orch.tick_stats["migration_returns"] >= 1
+    assert "solo" not in reg            # ... and the drain still completed
+
+
+@pytest.mark.parametrize("long_q,max_new", [
+    ("c" * 120, 6),    # context alone exceeds the small batcher
+    ("c" * 60, 40),    # context fits — context + owed tokens does not
+])
+def test_unfit_destination_returns_ticket_to_source(cfg, params, long_q,
+                                                    max_new):
+    """Regression: WAVES routes on islands, not batcher geometry — a
+    resumed request the destination batcher cannot hold (context too
+    long, OR context + still-owed decode tokens too long, which would
+    silently truncate the stream at max_len) must bounce back to the
+    draining source and finish there bit-exactly."""
+    from repro.serving.batcher import make_batcher
+    from repro.serving.engine import TickOrchestrator
+
+    def build():
+        islands = [personal_island("big", latency_ms=120,
+                                   capacity_units=2.0),
+                   personal_island("small", latency_ms=150,
+                                   capacity_units=2.0)]
+        reg = IslandRegistry()
+        for isl in islands:
+            reg.register(isl, reg.attestation_token(isl.island_id))
+        mist, tide, lh = MIST(), TIDE(reg), Lighthouse(reg)
+        for i in reg.all():
+            lh.heartbeat(i.island_id)
+        waves = WAVES(mist, tide, lh, Policy())
+        bats = {"big": make_batcher(cfg, cache="paged", num_slots=2,
+                                    max_len=192, params=params),
+                "small": make_batcher(cfg, cache="paged", num_slots=2,
+                                      max_len=96, params=params)}
+        return TickOrchestrator(waves, reg, bats, decode_ticks_per_tick=1,
+                                migration_token_budget=512)
+
+    def drive(churn):
+        orch = build()
+        rid = orch.submit(Request(query=long_q, priority="primary",
+                                  sensitivity_override=0.3),
+                          max_new_tokens=max_new)
+        k = 0
+        while orch.busy() and orch.tick_stats["ticks"] < 300:
+            orch.tick()
+            k += 1
+            if churn and k == 2:
+                orch.drain_island("big")
+        return orch.results[rid], orch
+
+    base, _o = drive(False)
+    res, orch = drive(True)
+    assert res is not None, "unfit destination dropped work"
+    assert res.text == base.text, "stream truncated at the destination"
+    assert orch.tick_stats["migration_returns"] >= 1
+    assert res.island_id == "big"
+
+
+def test_stochastic_stream_survives_migration(cfg, params):
+    """temperature > 0: per-slot sampling keys travel with the ticket, so
+    a mid-decode import continues the exact stochastic stream the source
+    would have produced."""
+    from repro.serving.batcher import PagedContinuousBatcher
+    kw = dict(params=params, num_slots=1, max_len=96, page_size=16,
+              temperature=0.8, seed=7)
+    b0 = PagedContinuousBatcher(cfg, **kw)
+    r0 = b0.submit(PROMPTS[0], max_new_tokens=6, trust_tier=2)
+    base = b0.run_until_done()[r0]
+    a = PagedContinuousBatcher(cfg, **kw)
+    b = PagedContinuousBatcher(cfg, **dict(kw, seed=99))  # different RNG
+    rid = a.submit(PROMPTS[0], max_new_tokens=6, trust_tier=2)
+    for _ in range(3):
+        a.tick()
+    nr = b.submit_ticket(a.freeze_request(rid))
+    b.run_until_done()
+    assert b.finished[nr] == base
+    assert b.migration_stats["imports"] == 1
+
+
+def test_deregister_teardown_without_churn(cfg):
+    """Satellite regression: plain deregister (no orchestrator) tears down
+    TIDE and LIGHTHOUSE per-island state via the registry hooks."""
+    reg = IslandRegistry()
+    isl = personal_island("gone", latency_ms=100)
+    reg.register(isl, reg.attestation_token("gone"))
+    tide, lh = TIDE(reg), Lighthouse(reg)
+    lh.heartbeat("gone")
+    tide.add_load("gone", 0.5)
+    lh.report_pool("gone", {"in_use": 1})
+    assert "gone" in tide.state and "gone" in lh._last_beat
+    reg.deregister("gone")
+    assert "gone" not in tide.state
+    assert "gone" not in lh._last_beat
+    assert "gone" not in lh.pool_telemetry()
+    assert reg.status("gone") == STATUS_FAILED     # unknown = fail closed
+    # deregistering twice is harmless
+    reg.deregister("gone")
+
+
+# ----------------------------------------------------- hypothesis properties
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["new", "export", "import",
+                                           "free"]),
+                          st.integers(0, 30), st.integers(1, 3)),
+                max_size=40))
+def test_refcounts_conserved_across_export_import_free(ops):
+    """Property (a): arbitrary export/import/free interleavings across two
+    pools never leak or double-free — audit() (which checks live ==
+    allocs - frees and free-list/refcount agreement) holds after every
+    op, and page footprints match the tracked request set exactly."""
+    pools = [PagePool(num_pages=12), PagePool(num_pages=12)]
+    reqs = {}                    # id -> (pool_idx, tier, page_ids)
+    tickets = {}                 # id -> (tier, records)
+    next_id = 0
+    for op, arg, tier in ops:
+        if op == "new":
+            pi = arg % 2
+            want = 1 + arg % 3
+            pages = []
+            for _ in range(want):
+                pid = pools[pi].alloc(tier)
+                if pid is None:
+                    break
+                pages.append(pid)
+            if pages:
+                reqs[next_id] = (pi, tier, pages)
+                next_id += 1
+        elif op == "export" and reqs:
+            rid = sorted(reqs)[arg % len(reqs)]
+            pi, rtier, pages = reqs.pop(rid)
+            recs = export_request(pools[pi], pages, len(pages) * 16)
+            tickets[rid] = (rtier, recs)
+        elif op == "import" and tickets:
+            rid = sorted(tickets)[arg % len(tickets)]
+            rtier, recs = tickets.pop(rid)
+            pi = arg % 2
+            got = import_request(pools[pi], recs, rtier)
+            if got is not None:
+                reqs[rid] = (pi, rtier, got[0])
+        elif op == "free" and reqs:
+            rid = sorted(reqs)[arg % len(reqs)]
+            pi, _t, pages = reqs.pop(rid)
+            for pid in pages:
+                pools[pi].decref(pid)
+        for p in pools:
+            p.audit()
+    for pi in (0, 1):
+        held = sum(len(pages) for q, (i, _t, pages) in reqs.items()
+                   if i == pi)
+        assert pools[pi].in_use() == held
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 3),       # export tier idx (3=None)
+                          st.integers(0, 3),       # import tier idx
+                          st.integers(0, 2),       # prompt family
+                          st.integers(1, 48)),     # prompt length
+                min_size=1, max_size=10))
+def test_migrated_pages_never_cross_tiers(moves):
+    """Property (b): pages exported at tier A can only ever attach or
+    register at tier A in the destination; mismatched-tier and untiered
+    imports are refused outright, so a migrated page can never land in a
+    different trust tier's prefix index."""
+    ps = 16
+    src = PagePool(num_pages=64, page_size=ps, max_len=ps * 16)
+    dst = PagePool(num_pages=64, page_size=ps, max_len=ps * 16)
+    families = {0: [7] * 64, 1: [7] * 32 + [9] * 32, 2: [11] * 64}
+    for et_idx, it_idx, fam, ln in moves:
+        etier = None if et_idx == 3 else 1 + et_idx
+        itier = None if it_idx == 3 else 1 + it_idx
+        ids = families[fam][:ln]
+        pages = []
+        for chash, fill in prefix_chunk_hashes(ids, ps):
+            pid = src.alloc(etier)
+            if pid is None:
+                break
+            src.register_prefix(pid, etier, chash, fill)
+            pages.append(pid)
+        if not pages:
+            continue
+        recs = export_request(src, pages, len(ids))
+        got = import_request(dst, recs, itier)
+        if itier is None or itier != etier:
+            assert got is None, "cross-tier/untiered import must refuse"
+        elif got is not None:
+            page_ids, _copied, hits = got
+            for pid in page_ids:
+                assert dst._meta[pid].tier == etier
+            for pid in page_ids:
+                dst.decref(pid)
+        src.audit()
+        dst.audit()
+    # end state: every index entry in both pools tier-tags its page
+    for pool in (src, dst):
+        for (tier, _h, _f), pid in pool._prefix_index.items():
+            assert pool._meta[pid].tier == tier
