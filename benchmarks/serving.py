@@ -21,8 +21,12 @@ that CI uploads. Artifact schema highlights:
 * ``mixed_prefill`` — long prompts submitted ahead of short ones, full vs
   chunked prefill on identical pools: short-prompt TTFT must improve
   (``short_ttft_improves``) without regressing total dispatched work
-  (``total_work_no_regress``). Failed checks exit nonzero — that is the
-  CI gate.
+  (``total_work_no_regress``);
+* ``fused_tick`` — the fused vs unfused dispatch A/B on the mixed
+  workload: greedy streams bit-exact, work clock equal, and the fused
+  path's per-tick device-dispatch peak <= 3 (wall time on shared runners
+  is noisy, so the LAUNCH COUNT is the gated wall-clock proxy). Failed
+  checks exit nonzero — that is the CI gate.
 """
 from __future__ import annotations
 
@@ -115,6 +119,8 @@ def run(cache_modes=("stacked", "paged"), json_path=None):
         artifact["mixed_prefill"] = mixed_prefill_ab(cfg, lines,
                                                      params=srv.params)
         artifact["churn"] = churn_ab(cfg, lines, params=srv.params)
+        artifact["fused_tick"] = fused_tick_ab(cfg, lines,
+                                               params=srv.params)
         # req/s comparison is wall-clock on shared runners (noisy), so it
         # is recorded but only the deterministic privacy/memory/TTFT
         # checks below gate the run
@@ -134,6 +140,8 @@ def run(cache_modes=("stacked", "paged"), json_path=None):
         "mixed_prefill", {}).get("checks", {}).items()})
     checks.update({f"churn/{k}": ok for k, ok in artifact.get(
         "churn", {}).get("checks", {}).items()})
+    checks.update({f"fused/{k}": ok for k, ok in artifact.get(
+        "fused_tick", {}).get("checks", {}).items()})
     global _FAILED_CHECKS
     _FAILED_CHECKS = [k for k, ok in checks.items() if not ok]
     for k in _FAILED_CHECKS:
@@ -374,6 +382,59 @@ def mixed_prefill_ab(cfg, lines, params=None, page_size=16, n_long=3,
         "total_work_no_regress":
             out["chunked"]["total_work"]
             <= out["full"]["total_work"] * 1.05,
+    }
+    return out
+
+
+def fused_tick_ab(cfg, lines, params=None, n_requests=16, max_new=8,
+                  slots=8):
+    """Fused-tick dispatch A/B on the mixed healthcare workload: the
+    fused path must be a pure launch-count optimization — bit-exact
+    greedy streams, identical deterministic work clock, per-tick model
+    dispatches capped at 3 (one batched chunk-prefill + one paged decode
+    in practice, vs one launch per chunk run + one decode unfused).
+    Wall-clock req/s is recorded for trajectory only; the gated proxies
+    are all deterministic."""
+    wl = healthcare_workload(n_requests, seed=7)
+    prompts = [(req.query, (1, 2, 3, None)[i % 4])
+               for i, (req, _s) in enumerate(wl)]
+
+    def drive(fused):
+        b = make_batcher(cfg, cache="paged", num_slots=slots, max_len=96,
+                         params=params, fused=fused)
+        rids = [b.submit(p, max_new_tokens=max_new, trust_tier=t)
+                for p, t in prompts]
+        t0 = time.perf_counter()
+        done = b.run_until_done()
+        dt = time.perf_counter() - t0
+        label = "fused" if fused else "unfused"
+        stats = {"streams": [done[r] for r in rids],
+                 "work_clock": b.work_clock,
+                 "ticks": b.stats["ticks"],
+                 "device_dispatches": b.stats["device_dispatches"],
+                 "tick_dispatches_max": b.stats["tick_dispatches_max"],
+                 "phase": _phase_stats(b),
+                 "req_s": round(len(done) / max(dt, 1e-9), 2)}
+        lines.append((f"serve/fused_tick_{label}", dt * 1e6,
+                      f"launches={stats['device_dispatches']}"
+                      f" tick_peak={stats['tick_dispatches_max']}"
+                      f" work={stats['work_clock']}"
+                      f" {stats['req_s']} req/s"))
+        return stats
+
+    unfused = drive(False)
+    fused = drive(True)
+    out = {
+        "unfused": {k: v for k, v in unfused.items() if k != "streams"},
+        "fused": {k: v for k, v in fused.items() if k != "streams"},
+        "checks": {
+            "bitexact_streams": fused["streams"] == unfused["streams"],
+            "work_clock_equal":
+                fused["work_clock"] == unfused["work_clock"],
+            "tick_dispatches_le_3": fused["tick_dispatches_max"] <= 3,
+            "fewer_device_dispatches":
+                fused["device_dispatches"] < unfused["device_dispatches"],
+        },
     }
     return out
 

@@ -62,7 +62,12 @@ def chunked_prefill_attention(q, k_pages, v_pages, block_table, start_pos,
                               scale=None, block_q=None):
     """q (B,T,H,D) one page-aligned prefill chunk per sequence;
     k_pages/v_pages (P,page_size,Hkv,D) shared pool already holding the
-    chunk's K/V; block_table (B,N); start_pos (B,) absolute chunk starts."""
+    chunk's K/V; block_table (B,N); start_pos (B,) absolute chunk starts.
+
+    Rows are independent — the fused tick batches chunk runs from
+    DIFFERENT requests (with bucketed B/T/N, see batcher._bucket); pad
+    rows point at the scratch page and their −∞-masked positions
+    contribute exact zeros, so bucketing never perturbs real rows."""
     return _chunk.chunked_prefill_attention(q, k_pages, v_pages, block_table,
                                             start_pos, scale, block_q=block_q,
                                             interpret=_interpret())

@@ -15,6 +15,16 @@ from repro.sharding import shard
 NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
 
 
+def _fp8_quantize(x, dt):
+    """Per-token-per-head symmetric quantization for fp8 KV caches: the
+    head-dim amax maps onto the dtype's max normal, keeping small K/V
+    values out of the fp8 subnormal range. Returns (quantized, scale)."""
+    fmax = float(jnp.finfo(dt).max)
+    xf = x.astype(jnp.float32)
+    s = jnp.maximum(jnp.max(jnp.abs(xf), axis=-1) / fmax, 1e-12)
+    return (xf / s[..., None]).astype(dt), s
+
+
 def allowed_mask(q_pos, k_pos, window=None, prefix_len=0):
     """bool (Sq, Sk): True where attention is allowed."""
     allowed = k_pos[None, :] <= q_pos[:, None]
@@ -218,35 +228,52 @@ def attn_apply(cfg, p, x, positions, *, mode, cache=None, window=None,
         new_cache = None
         if cache is not None:
             W = cache["k"].shape[1]
-            kd = k.astype(cache["k"].dtype)
-            vd = v.astype(cache["v"].dtype)
+            if "k_scale" in cache:  # fp8 cache: quantize on write
+                kd, ks = _fp8_quantize(k, cache["k"].dtype)
+                vd, vs = _fp8_quantize(v, cache["v"].dtype)
+            else:
+                kd = k.astype(cache["k"].dtype)
+                vd = v.astype(cache["v"].dtype)
             if W >= S:
                 new_k = jax.lax.dynamic_update_slice(cache["k"], kd, (0, 0, 0, 0))
                 new_v = jax.lax.dynamic_update_slice(cache["v"], vd, (0, 0, 0, 0))
             else:  # windowed cache: keep the last W tokens
                 new_k, new_v = kd[:, -W:], vd[:, -W:]
             new_cache = {"k": new_k, "v": new_v}
-    elif mode == "chunk":  # page-aligned prefill chunk into the paged pool
-        pos = positions          # (T,) absolute positions of the chunk
+            if "k_scale" in cache:
+                if W >= S:
+                    new_cache["k_scale"] = jax.lax.dynamic_update_slice(
+                        cache["k_scale"], ks, (0, 0, 0))
+                    new_cache["v_scale"] = jax.lax.dynamic_update_slice(
+                        cache["v_scale"], vs, (0, 0, 0))
+                else:
+                    new_cache["k_scale"] = ks[:, -W:]
+                    new_cache["v_scale"] = vs[:, -W:]
+    elif mode == "chunk":  # page-aligned prefill chunks into the paged pool
+        pos = positions          # (B,T) absolute positions, one row per run
         S = x.shape[1]
         ps = cache["k_pages"].shape[-3]
-        assert B == 1 and S % ps == 0, (
-            f"chunk mode is whole pool pages of one sequence, got batch "
-            f"{B} x {S} tokens (page_size {ps})")
+        assert S % ps == 0, (
+            f"chunk mode is whole pool pages, got {S} tokens "
+            f"(page_size {ps})")
         q = apply_rope(q, pos, cfg.rope_theta)
         k = apply_rope(k, pos, cfg.rope_theta)
         kd = k.astype(cache["k_pages"].dtype)
         vd = v.astype(cache["v_pages"].dtype)
-        # write the fresh chunk's K/V onto its pages BEFORE the gather so
-        # the chunk attends to itself through the block table like any
-        # other context; dst_page entries == scratch (0) mask the write
-        # for prefix-shared pages (their pool page already holds it)
+        # write the fresh chunks' K/V onto their pages BEFORE the gather so
+        # each chunk attends to itself — and to pages other rows of the
+        # SAME dispatch wrote at this layer — through the block table like
+        # any other context; dst_page entries == scratch (0) mask the
+        # write for prefix-shared pages (their pool page already holds it)
+        # and for padding rows/chunks (the scratch page is write-only
+        # garbage that causal masking keeps out of every real row)
         C = S // ps
-        new_kp = cache["k_pages"].at[dst_page].set(
-            kd[0].reshape(C, ps, *kd.shape[2:]))
-        new_vp = cache["v_pages"].at[dst_page].set(
-            vd[0].reshape(C, ps, *vd.shape[2:]))
-        o = attend_chunk_paged(q, new_kp, new_vp, block_table, pos[:1],
+        dst = dst_page if dst_page.ndim == 2 else dst_page[None]  # (B,C)
+        new_kp = cache["k_pages"].at[dst.reshape(-1)].set(
+            kd.reshape(B * C, ps, *kd.shape[2:]))
+        new_vp = cache["v_pages"].at[dst.reshape(-1)].set(
+            vd.reshape(B * C, ps, *vd.shape[2:]))
+        o = attend_chunk_paged(q, new_kp, new_vp, block_table, pos[:, 0],
                                scale)
         new_cache = {"k_pages": new_kp, "v_pages": new_vp}
     elif "k_pages" in cache:  # decode against the paged pool
@@ -273,26 +300,44 @@ def attn_apply(cfg, p, x, positions, *, mode, cache=None, window=None,
         posv = jnp.zeros((1,), jnp.int32) + pos
         q = apply_rope(q, posv, cfg.rope_theta)
         k = apply_rope(k, posv, cfg.rope_theta)
-        kd = k.astype(cache["k"].dtype)
-        vd = v.astype(cache["v"].dtype)
-        if use_seq_sharded(cfg.num_kv_heads, cache["k"].shape[1]):
+        quant = "k_scale" in cache  # fp8 cache: quantize on write
+        if quant:
+            kd, ks = _fp8_quantize(k, cache["k"].dtype)
+            vd, vs = _fp8_quantize(v, cache["v"].dtype)
+        else:
+            kd = k.astype(cache["k"].dtype)
+            vd = v.astype(cache["v"].dtype)
+        if not quant and use_seq_sharded(cfg.num_kv_heads,
+                                         cache["k"].shape[1]):
             new_k, new_v, o = seq_sharded_decode(
                 cache["k"], cache["v"], kd, vd, q, pos, window, scale)
+            new_cache = {"k": new_k, "v": new_v}
         else:
             W = cache["k"].shape[1]
             slot = (pos % W) if window else jnp.minimum(pos, W - 1)
             new_k = jax.lax.dynamic_update_slice(cache["k"], kd, (0, slot, 0, 0))
             new_v = jax.lax.dynamic_update_slice(cache["v"], vd, (0, slot, 0, 0))
             valid = jnp.minimum(pos + 1, W)
+            new_cache = {"k": new_k, "v": new_v}
+            if quant:
+                new_cache["k_scale"] = jax.lax.dynamic_update_slice(
+                    cache["k_scale"], ks, (0, slot, 0))
+                new_cache["v_scale"] = jax.lax.dynamic_update_slice(
+                    cache["v_scale"], vs, (0, slot, 0))
+                k_att = new_k.astype(jnp.float32) \
+                    * new_cache["k_scale"][..., None]
+                v_att = new_v.astype(jnp.float32) \
+                    * new_cache["v_scale"][..., None]
+            else:
+                k_att, v_att = new_k, new_v
             from repro import kernels as _k
             if _k.enabled() and W % 128 == 0:
                 from repro.kernels import ops as _kops
                 o = _kops.decode_attention(
-                    q[:, 0], new_k, new_v, valid, scale,
+                    q[:, 0], k_att, v_att, valid, scale,
                     block_k=min(512, W))[:, None]
             else:
-                o = attend_decode(q, new_k, new_v, valid, scale)
-        new_cache = {"k": new_k, "v": new_v}
+                o = attend_decode(q, k_att, v_att, valid, scale)
 
     o = shard(o, "batch", None, "heads", None)
     y = jnp.einsum("bsq,qd->bsd", o.reshape(B, o.shape[1], H * hd), p["wo"])

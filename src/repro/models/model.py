@@ -181,7 +181,24 @@ class Model:
             return (isinstance(v, tuple) and len(v) == 2
                     and isinstance(v[0], tuple))
 
-        return walk(spec)
+        out = walk(spec)
+        if jnp.dtype(dtype) in (jnp.dtype(jnp.float8_e4m3fn),
+                                jnp.dtype(jnp.float8_e5m2)):
+            # fp8 KV quantizes on write with a per-token-per-head scale;
+            # the scale leaves live beside k/v so the same pytree carries
+            # both (see attention.attn_apply)
+            def add_scales(node):
+                for v in node.values():
+                    if isinstance(v, dict):
+                        add_scales(v)
+                if "k" in node and not isinstance(node["k"], dict):
+                    for leaf in ("k", "v"):
+                        sh = node[leaf].shape[:-1]
+                        node[leaf + "_scale"] = (
+                            jax.ShapeDtypeStruct(sh, jnp.float32) if abstract
+                            else jnp.ones(sh, jnp.float32))
+            add_scales(out)
+        return out
 
     def cache_axes(self, batch, max_len, window=None):
         spec = self.cache_spec(batch, max_len, window)
@@ -226,12 +243,13 @@ class Model:
         required (built by init_cache). Paged decode (cache leaves built by
         ``serving.kvpool``) additionally takes ``block_table`` (B, N) and
         allows ``pos`` to be a (B,) vector of per-sequence positions.
-        mode='chunk': one page-aligned prefill chunk against the paged
-        pool — tokens (1, page_size), ``pos`` the scalar absolute position
-        of the chunk's first token, ``block_table`` (1, N) covering every
-        page the sequence occupies through this chunk, ``dst_page`` the
-        scalar page id the chunk's K/V is scattered onto (the scratch page
-        when the chunk is prefix-shared). Attention-only patterns."""
+        mode='chunk': page-aligned prefill chunk runs against the paged
+        pool — tokens (B, C*page_size) with one independent run per row,
+        ``pos`` the (B,) absolute positions of each run's first token
+        (scalar accepted for B == 1), ``block_table`` (B, N) covering
+        every page each sequence occupies through its run, ``dst_page``
+        (B, C) page ids the runs' K/V is scattered onto (the scratch page
+        for prefix-shared chunks and padding). Attention-only patterns."""
         cfg = self.cfg
         emb = params["embed"]
         if embeddings is not None and tokens is not None:
@@ -247,7 +265,9 @@ class Model:
         if mode == "full":
             positions = jnp.arange(S, dtype=jnp.int32)
         elif mode == "chunk":
-            positions = pos + jnp.arange(S, dtype=jnp.int32)
+            # scalar pos -> (1,S); (B,) per-row starts -> (B,S)
+            starts = jnp.asarray(pos, jnp.int32).reshape(-1)
+            positions = starts[:, None] + jnp.arange(S, dtype=jnp.int32)[None]
         else:
             positions = pos
 

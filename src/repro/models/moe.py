@@ -149,13 +149,19 @@ def moe_apply(cfg, p, x):
         x_spec = P(batch_axes if batch_axes else None, None)
         fn = partial(_moe_local, k=k, E=E, E_loc=E_loc, C=C,
                      model_axis="model", batch_axes=batch_axes)
-        y, aux = jax.shard_map(
+        # jax.shard_map(check_vma=...) only exists on newer jax; fall
+        # back to the experimental entry point (check_rep) on 0.4.x
+        if hasattr(jax, "shard_map"):
+            smap = partial(jax.shard_map, check_vma=False)
+        else:
+            from jax.experimental.shard_map import shard_map as _shard_map
+            smap = partial(_shard_map, check_rep=False)
+        y, aux = smap(
             fn, mesh=mesh,
             in_specs=(P(None, None), P("model", None, None),
                       P("model", None, None), P("model", None, None),
                       x_spec),
             out_specs=(x_spec, P()),
-            check_vma=False,
         )(p["router"], p["we_gate"], p["we_up"], p["we_down"], x2)
 
     y = y.reshape(B, S, d)

@@ -104,6 +104,36 @@ def make_chunked_prefill_step(model, window=None):
     return chunked_prefill_step
 
 
+def make_fused_prefill_step(model, window=None):
+    """One fused dispatch for EVERY prefill chunk run of a batcher tick,
+    with on-device first-token emission (the fused-tick fast path).
+
+    Rows are independent chunk runs, possibly from different requests:
+    token (R, C*page_size) zero-padded ids, ``start`` (R,) absolute
+    positions of each run's first token, block_table (R, W), dst_page
+    (R, C) pool page ids (scratch page == masked write, used for
+    prefix-shared chunks and padding). Runs whose request completes its
+    prompt this dispatch emit their boundary argmax token straight into
+    the device-resident sampling state: ``emit_slot`` (R,) is the decode
+    slot to write (num_slots = no emission, dropped OOB), ``emit_off``
+    (R,) the boundary row inside the run, ``gen_idx`` (R,) the write
+    index into ``gen_buf``. Returns (new_last_tok, new_gen_buf,
+    new_cache) — no logits leave the device, so the host never syncs."""
+    def fused_prefill_step(params, cache, token, start, block_table,
+                           dst_page, emit_slot, emit_off, gen_idx,
+                           last_tok, gen_buf):
+        logits, new_cache, _ = model.forward(
+            params, mode="chunk", tokens=token, cache=cache, pos=start,
+            window=window, block_table=block_table, dst_page=dst_page)
+        rows = jnp.arange(logits.shape[0])
+        bound = jnp.argmax(logits[rows, emit_off], axis=-1).astype(jnp.int32)
+        new_last = last_tok.at[emit_slot].set(bound, mode="drop")
+        new_gen = gen_buf.at[emit_slot, gen_idx].set(bound, mode="drop")
+        return new_last, new_gen, new_cache
+
+    return fused_prefill_step
+
+
 def make_paged_serve_step(model, window=None):
     """One fused decode step for ALL sequences of a paged KV pool: token
     (B,1), pos (B,) per-sequence absolute positions, block_table (B,N)
@@ -116,3 +146,29 @@ def make_paged_serve_step(model, window=None):
         return logits[:, 0, :], new_cache
 
     return paged_serve_step
+
+
+def make_fused_decode_step(model, window=None):
+    """Paged decode over all slots against DEVICE-RESIDENT sampling state
+    (the fused-tick fast path): each row's input token comes from
+    ``host_tok`` where ``host_mask`` is set (admission-seeded or
+    host-sampled tokens) and from ``last_tok`` otherwise (tokens the
+    device produced in earlier dispatches and the host never saw).
+    Greedy next tokens are written back into ``last_tok`` and logged at
+    ``gen_buf[write_slot, gen_idx]`` — rows with write_slot == num_slots
+    (idle, stalled, or host-sampled slots) drop their writes OOB.
+    Returns (logits, new_last_tok, new_gen_buf, new_cache); greedy
+    callers ignore the logits, so nothing forces a device sync."""
+    def fused_decode_step(params, cache, last_tok, host_mask, host_tok,
+                          pos, block_table, write_slot, gen_idx, gen_buf):
+        tok = jnp.where(host_mask, host_tok, last_tok)[:, None]
+        logits, new_cache, _ = model.forward(
+            params, mode="decode", tokens=tok, cache=cache, pos=pos,
+            window=window, block_table=block_table)
+        logits = logits[:, 0, :]
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        new_last = last_tok.at[write_slot].set(nxt, mode="drop")
+        new_gen = gen_buf.at[write_slot, gen_idx].set(nxt, mode="drop")
+        return logits, new_last, new_gen, new_cache
+
+    return fused_decode_step

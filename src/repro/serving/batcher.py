@@ -37,6 +37,19 @@ island's decode slots for its whole length (Sarathi-style mixed
 scheduling). ``prefill="full"`` keeps the monolithic single-dispatch
 full-prompt admission as the A/B baseline.
 
+The chunked path runs **fused** by default (``fused=True``): each tick is
+split into a host-side PLAN (chunk resolution, page allocation, prefix
+registration — no model work) and at most two device dispatches — one
+batched chunk-prefill over every planned run across requests, one paged
+decode whose input tokens resolve on device (``_dev_last``/``_dev_gen``
+hold greedy sampling state, so boundary and decode tokens chain between
+dispatches without the host ever syncing). Dispatch shapes round up to
+power-of-two buckets persisted across ticks (``_bucket``), padding is
+exact-zero masked, and token values cross to the host only at finish,
+freeze and preemption (``_materialize_slot``) — so the host plans tick
+t+1 while the device executes tick t, and the token streams stay
+bit-exact vs ``fused=False`` (the launch-count A/B baseline).
+
 Both managers support **live migration** (freeze/thaw): ``freeze_request``
 evacuates a request — still queued, mid-prefill, or mid-decode — into a
 ``MigrationTicket`` (its KV pages or dense cache row, generation progress,
@@ -61,6 +74,8 @@ import numpy as np
 from repro.data.tokenizer import ByteTokenizer
 from repro.models.model import effective_pattern, get_model
 from repro.models.steps import (make_chunked_prefill_step,
+                                make_fused_decode_step,
+                                make_fused_prefill_step,
                                 make_paged_serve_step, make_prefill_step,
                                 make_serve_step)
 from repro.serving.kvpool import (SCRATCH_PAGE, PagePool, export_request,
@@ -100,6 +115,11 @@ class SlotState:
     # stream is carried + generated
     carried: list = field(default_factory=list)
     sample_key: Optional[object] = None         # per-request PRNG state
+    # fused-tick mode: trailing generated tokens whose VALUES still live
+    # only on the device (dev_gen buffer); the full stream is
+    # carried + generated + gen_dev device-resident tokens, materialized
+    # at finish/freeze/preemption (see _materialize_slot)
+    gen_dev: int = 0
 
 
 class _BatcherBase:
@@ -133,9 +153,14 @@ class _BatcherBase:
         # "admissions" counts requests entering a slot; "prefill_dispatches"
         # counts model prefill dispatches (1/admission monolithic, 1/chunk
         # chunked). "prefills" is the legacy alias of prefill_dispatches.
+        # "device_dispatches" counts jitted MODEL program launches (the
+        # fused tick collapses many prefill_dispatches into one);
+        # "tick_dispatches_max" is the per-tick peak — the deterministic
+        # proxy the benchmark gates on
         self.stats = {"ticks": 0, "prefills": 0, "admissions": 0,
                       "prefill_dispatches": 0, "decode_tokens": 0,
-                      "decode_steps": 0, "queued_peak": 0}
+                      "decode_steps": 0, "queued_peak": 0,
+                      "device_dispatches": 0, "tick_dispatches_max": 0}
         # virtual work clock: advances by every token the model actually
         # processes (prefill chunk fills + decode tokens). Deterministic
         # proxy for dispatch wall time — TTFT measured against it exposes
@@ -253,6 +278,16 @@ class _BatcherBase:
     def busy(self) -> bool:
         return bool(self.queue) or any(s.active for s in self.slots)
 
+    def tick(self):
+        """One engine tick; ``tick_dispatches_max`` records the peak
+        number of model dispatches any single tick issued — the
+        deterministic wall-clock proxy the serving benchmark gates on."""
+        d0 = self.stats["device_dispatches"]
+        self._tick_inner()
+        self.stats["tick_dispatches_max"] = max(
+            self.stats["tick_dispatches_max"],
+            self.stats["device_dispatches"] - d0)
+
     def run_until_done(self, max_ticks=10_000):
         while self.busy() and self.stats["ticks"] < max_ticks:
             self.tick()
@@ -346,6 +381,7 @@ class ContinuousBatcher(_BatcherBase):
                                           dtype=jnp.bfloat16)
             logits, cache = self._prefill(self.params, cache,
                                           {"tokens": toks})
+            self.stats["device_dispatches"] += 1
             self._cache = self._write(self._cache, cache, jnp.int32(si))
             sk = (ticket.sample_key if ticket is not None
                   and ticket.sample_key is not None
@@ -407,7 +443,7 @@ class ContinuousBatcher(_BatcherBase):
         return True
 
     # --------------------------------------------------------------- tick
-    def tick(self):
+    def _tick_inner(self):
         """Admit from queue, then ONE fused decode step for all slots."""
         self._admit()
         self.stats["ticks"] += 1
@@ -422,6 +458,7 @@ class ContinuousBatcher(_BatcherBase):
             poss[si] = s.pos
         logits, self._cache = self._decode_all(
             self.params, self._cache, jnp.asarray(toks), jnp.asarray(poss))
+        self.stats["device_dispatches"] += 1
         nxt = self._sample_ready(logits[:, 0, :], active)
         self.stats["decode_steps"] += 1
         self.work_clock += len(active)
@@ -458,7 +495,7 @@ class PagedContinuousBatcher(_BatcherBase):
     def __init__(self, cfg, params=None, num_slots=4, max_len=256,
                  seed=0, dtype="float32", temperature=0.0, page_size=16,
                  num_pages=None, sharing=True, prefill="chunked",
-                 prefill_token_budget=None):
+                 prefill_token_budget=None, fused=True):
         if not paged_supported(cfg):
             raise ValueError(
                 f"paged KV cache requires a full-history attention-only "
@@ -496,10 +533,61 @@ class PagedContinuousBatcher(_BatcherBase):
         self._prefill_rr = 0     # rotating round-robin pointer (fairness)
         self._enc_len: dict[int, int] = {}   # backlog length memo (by rid)
         self.blocked_last_tick = 0
+        # fused tick: every chunk run of a tick batches into ONE prefill
+        # dispatch, decode reads/writes device-resident sampling state, and
+        # token values only cross to the host at finish/freeze/preemption —
+        # so the host plans tick t+1 while the device executes tick t
+        # (JAX async dispatch is the double buffer)
+        self.fused = fused and prefill == "chunked"
+        self._fused_prefill = jax.jit(make_fused_prefill_step(self.model),
+                                      donate_argnums=(1,))
+        self._fused_decode = jax.jit(make_fused_decode_step(self.model),
+                                     donate_argnums=(1,))
+        self._dev_last = jnp.zeros((num_slots,), jnp.int32)
+        self._dev_gen = jnp.zeros((num_slots, max_len), jnp.int32)
+        # compiled pow2 bucket sizes, persisted across ticks per dimension
+        # (rows / chunk pages / block-table widths): re-dispatching into an
+        # already-compiled larger bucket beats compiling a tighter one
+        self._buckets: dict[str, set] = {}
         self.stats.update({"share_hits": 0, "cow_copies": 0, "stalls": 0,
                            "preemptions": 0, "rejected_too_large": 0,
                            "prefix_tokens_skipped": 0,
                            "prefill_chunk_tokens": 0})
+
+    # -------------------------------------------------------- fused-tick
+    def _bucket(self, kind, need, cap) -> int:
+        """Dispatch-shape bucket for ``kind``: the pow2 ceiling of
+        ``need`` (capped) — unless a LARGER bucket of this kind already
+        compiled, in which case that one is reused instead of compiling a
+        new shape. Persisted across ticks, so steady-state serving
+        converges on a handful of compiled programs per kind. Padding is
+        numerically free: padded rows/pages write only the scratch page
+        and masked attention positions contribute exact zeros."""
+        need = max(1, min(need, cap))
+        want = min(1 << (need - 1).bit_length(), cap)
+        used = self._buckets.setdefault(kind, set())
+        if want not in used:
+            bigger = [b for b in used if b >= need]
+            if bigger:
+                return min(bigger)
+            used.add(want)
+        return want
+
+    def _materialize_slot(self, si):
+        """Pull slot ``si``'s device-resident generated tokens to the
+        host (the only device sync of the fused path — finish, freeze and
+        preemption boundaries)."""
+        s = self.slots[si]
+        if not s.gen_dev:
+            return
+        lo = len(s.generated)
+        vals = np.asarray(self._dev_gen[si, lo:lo + s.gen_dev])
+        s.generated.extend(int(v) for v in vals)
+        s.gen_dev = 0
+
+    def _finish_slot(self, si):
+        self._materialize_slot(si)
+        super()._finish_slot(si)
 
     # ---------------------------------------------------------- admission
     def _admit(self):
@@ -578,6 +666,7 @@ class PagedContinuousBatcher(_BatcherBase):
                                           dtype=jnp.bfloat16)
             logits, dense = self._prefill(self.params, cache,
                                           {"tokens": toks})
+            self.stats["device_dispatches"] += 1
             # one fused scatter for the whole admission: shared chunks are
             # masked to the scratch page (their pool pages already hold
             # identical K/V and must not be touched)
@@ -802,6 +891,7 @@ class PagedContinuousBatcher(_BatcherBase):
         budget = self.prefill_token_budget
         n = self.num_slots
         start = self._prefill_rr
+        rows = []
         progress = True
         while budget > 0 and progress:
             progress = False
@@ -812,17 +902,27 @@ class PagedContinuousBatcher(_BatcherBase):
                 s = self.slots[si]
                 if not (s.active and s.next_chunk < len(s.chunks)):
                     continue
-                budget -= self._advance_prefill(si, budget)
+                if self.fused:
+                    row, gtok = self._plan_prefill_row(si, budget)
+                    if row is not None:
+                        rows.append(row)
+                    budget -= gtok
+                else:
+                    budget -= self._advance_prefill(si, budget)
                 self._prefill_rr = (si + 1) % n
                 progress = True
+        if rows:
+            self._execute_prefill_rows(rows)
 
-    def _advance_prefill(self, si, budget) -> int:
-        """Resolve plan entries for slot ``si`` until one dispatch happens:
-        late-attached chunks are skipped for free, and CONSECUTIVE fresh
-        chunks are fused into a single dispatch of up to ``budget`` tokens
-        (at least one chunk always dispatches, so progress is guaranteed
-        even when budget < page_size). Completing the plan emits the first
-        token. Returns the tokens dispatched."""
+    def _plan_group(self, si, budget):
+        """Resolve plan entries for slot ``si`` into ONE dispatch-worth of
+        work: late-attached chunks are skipped for free, and CONSECUTIVE
+        fresh chunks fuse into a single run of up to ``budget`` tokens (at
+        least one chunk always resolves, so progress is guaranteed even
+        when budget < page_size). Pure host-side planning — page
+        resolution, reservation release and block-table updates happen
+        here; no model dispatch. Returns (group, gtok) where group holds
+        (chunk_idx, chash, fill, dst_page) entries."""
         s = self.slots[si]
         group = []                    # (chunk_idx, chash, fill, dst) run
         gtok = 0
@@ -861,6 +961,15 @@ class PagedContinuousBatcher(_BatcherBase):
             s.next_chunk += 1
             if last or gtok >= budget:
                 break
+        return group, gtok
+
+    def _advance_prefill(self, si, budget) -> int:
+        """Unfused prefill step: plan one chunk run for slot ``si`` and
+        dispatch it immediately. Completing the plan emits the first
+        token from the run's boundary logits. Returns the tokens
+        dispatched."""
+        s = self.slots[si]
+        group, gtok = self._plan_group(si, budget)
         if not group:                 # plan drained purely by skips —
             return 0                  # impossible (last always dispatches)
         logits = self._dispatch_chunks(si, group)
@@ -879,6 +988,80 @@ class PagedContinuousBatcher(_BatcherBase):
                 s.generated = [int(jnp.argmax(logits[0, off]))]
                 self._note_first_token(s.request_id)
         return gtok
+
+    def _plan_prefill_row(self, si, budget):
+        """Fused prefill step, plan half: resolve one chunk run for slot
+        ``si`` (identical group formation to the unfused path) and return
+        it as a row for this tick's single fused dispatch. Fresh pages
+        REGISTER at plan time — nothing reads a registered page before
+        this tick's fused dispatch writes it, and a same-dispatch attach
+        still gathers the right bytes because every layer scatters its
+        K/V before it attends. If the run completes the prompt, the
+        boundary argmax token is emitted ON DEVICE into the slot's
+        device-resident stream (``emit_slot``), so completing prefill
+        never syncs the host. Returns (row | None, tokens_planned)."""
+        s = self.slots[si]
+        group, gtok = self._plan_group(si, budget)
+        if not group:
+            return None, 0
+        for j, chash, fill, dst in group:
+            if dst != SCRATCH_PAGE:
+                self.pool.register_prefix(dst, s.tier, chash, fill)
+        self.stats["prefill_chunk_tokens"] += gtok
+        self._note_prefill_dispatch(gtok)
+        row = {"si": si, "group": group,
+               "start": group[0][0] * self.page_size,
+               "bt": self.block_tables[si].copy(),
+               "emit_slot": self.num_slots, "emit_off": 0, "gen_idx": 0}
+        if s.next_chunk == len(s.chunks):
+            s.pos = s.prompt_len
+            if not s.generated and not s.gen_dev:
+                row["emit_slot"] = si
+                row["emit_off"] = ((s.prompt_len - 1)
+                                   - group[0][0] * self.page_size)
+                row["gen_idx"] = len(s.generated) + s.gen_dev
+                s.gen_dev += 1
+                self._note_first_token(s.request_id)
+        return row, gtok
+
+    def _execute_prefill_rows(self, rows):
+        """Fused prefill step, execute half: ONE device dispatch for
+        every chunk run planned this tick, across requests. Rows pad to
+        bucketed shapes (row count / run pages / table width); padding
+        rows write only the scratch page and emit nothing, and masked
+        attention keeps real rows away from their garbage."""
+        ps = self.page_size
+        r_n = self._bucket("rows", len(rows), 1 << 16)
+        c_n = self._bucket("chunk", max(len(r["group"]) for r in rows),
+                           self._chunk_pages_canon)
+        w_n = self._bucket("prefill_w",
+                           max(r["group"][-1][0] for r in rows) + 1,
+                           self.pages_per_seq)
+        toks = np.zeros((r_n, c_n * ps), np.int32)
+        starts = np.zeros(r_n, np.int32)
+        bt = np.zeros((r_n, w_n), np.int32)
+        dst = np.zeros((r_n, c_n), np.int32)            # pad -> scratch
+        emit_slot = np.full(r_n, self.num_slots, np.int32)  # pad -> drop
+        emit_off = np.zeros(r_n, np.int32)
+        gen_idx = np.zeros(r_n, np.int32)
+        for r, row in enumerate(rows):
+            s = self.slots[row["si"]]
+            for n, (j, _h, fill, d) in enumerate(row["group"]):
+                toks[r, n * ps:n * ps + fill] = \
+                    s.prompt_ids[j * ps:j * ps + fill]
+                dst[r, n] = d
+            starts[r] = row["start"]
+            bt[r] = row["bt"][:w_n]
+            emit_slot[r] = row["emit_slot"]
+            emit_off[r] = row["emit_off"]
+            gen_idx[r] = row["gen_idx"]
+        self._dev_last, self._dev_gen, self.pool.pages = \
+            self._fused_prefill(
+                self.params, self.pool.pages, jnp.asarray(toks),
+                jnp.asarray(starts), jnp.asarray(bt), jnp.asarray(dst),
+                jnp.asarray(emit_slot), jnp.asarray(emit_off),
+                jnp.asarray(gen_idx), self._dev_last, self._dev_gen)
+        self.stats["device_dispatches"] += 1
 
     def _dispatch_chunks(self, si, group):
         """ONE model dispatch for a run of consecutive chunks: gathers
@@ -912,6 +1095,7 @@ class PagedContinuousBatcher(_BatcherBase):
             self.params, self.pool.pages, jnp.asarray(toks),
             jnp.int32(start), jnp.asarray(self.block_tables[si:si + 1, :w]),
             jnp.asarray(dst))
+        self.stats["device_dispatches"] += 1
         self.stats["prefill_chunk_tokens"] += fills
         self._note_prefill_dispatch(fills)
         return logits
@@ -926,6 +1110,7 @@ class PagedContinuousBatcher(_BatcherBase):
         identical on both sides). Reservations held for undispatched
         chunks return to the pool — they belong to the plan, and the plan
         leaves with the request."""
+        self._materialize_slot(si)      # fused ticks leave a device tail
         s = self.slots[si]
         ps = self.page_size
         mid_prefill = s.next_chunk < len(s.chunks)
@@ -996,7 +1181,7 @@ class PagedContinuousBatcher(_BatcherBase):
         return True
 
     # --------------------------------------------------------------- tick
-    def tick(self):
+    def _tick_inner(self):
         """Admit from queue (attaching to cached same-tier prefixes),
         spend the prefill token budget on queued chunks, then ONE fused
         paged decode step for every slot whose prompt is fully prefilled."""
@@ -1034,11 +1219,15 @@ class PagedContinuousBatcher(_BatcherBase):
 
             def invested(si):
                 s = self.slots[si]
-                return len(s.pages) * self.page_size + len(s.generated)
+                return (len(s.pages) * self.page_size + len(s.generated)
+                        + s.gen_dev)
 
             victim = min(stalled + prefilling, key=invested)
             if victim in stalled:
                 stalled.remove(victim)
+            # the resume ticket needs the victim's full token stream on
+            # the host (fused ticks leave a device-resident tail)
+            self._materialize_slot(victim)
             s = self.slots[victim]
             # release the reservations its undispatched fresh chunks hold
             self.reserved -= sum(1 for (j, _h, _f) in s.chunks[s.next_chunk:]
@@ -1063,6 +1252,9 @@ class PagedContinuousBatcher(_BatcherBase):
                     stalled.remove(si)
         if not ready:
             return
+        if self.fused:
+            self._decode_fused(ready)
+            return
         toks = np.zeros((self.num_slots, 1), np.int32)
         poss = np.zeros((self.num_slots,), np.int32)
         bt = np.zeros_like(self.block_tables)
@@ -1081,6 +1273,7 @@ class PagedContinuousBatcher(_BatcherBase):
         logits, self.pool.pages = self._decode_all(
             self.params, self.pool.pages, jnp.asarray(toks),
             jnp.asarray(poss), jnp.asarray(bt[:, :n_live]))
+        self.stats["device_dispatches"] += 1
         nxt = self._sample_ready(logits, ready)
         self.stats["decode_steps"] += 1
         self.work_clock += len(ready)
@@ -1091,6 +1284,70 @@ class PagedContinuousBatcher(_BatcherBase):
             self.stats["decode_tokens"] += 1
             done = (len(s.carried) + len(s.generated) >= s.max_new
                     or s.pos >= self.max_len - 1)
+            if done:
+                for pid in s.pages:
+                    self.pool.decref(pid)
+                self.block_tables[si] = 0
+                self._finish_slot(si)
+
+    def _decode_fused(self, ready):
+        """Fused-tick decode: one dispatch whose input tokens resolve ON
+        DEVICE — a slot's last token is host-known only while
+        ``gen_dev == 0`` (admission-seeded or host-sampled); otherwise it
+        lives in ``_dev_last`` where earlier fused dispatches left it.
+        Greedy next tokens append to the device-resident stream, so the
+        host's plan→dispatch loop never blocks on the device (JAX async
+        dispatch double-buffers tick t+1's planning against tick t's
+        execution). Stochastic sampling must see the logits anyway, so
+        temperature > 0 materializes the ready slots and samples on the
+        host exactly as the unfused path does."""
+        greedy = self.temperature <= 0.0
+        if not greedy:
+            for si in ready:
+                self._materialize_slot(si)
+        toks = np.zeros((self.num_slots,), np.int32)
+        host_mask = np.zeros((self.num_slots,), bool)
+        poss = np.zeros((self.num_slots,), np.int32)
+        bt = np.zeros_like(self.block_tables)
+        write_slot = np.full(self.num_slots, self.num_slots, np.int32)
+        gen_idx = np.zeros((self.num_slots,), np.int32)
+        for si in ready:
+            s = self.slots[si]
+            if s.gen_dev == 0:
+                host_mask[si] = True
+                toks[si] = s.generated[-1]
+            poss[si] = s.pos
+            bt[si] = self.block_tables[si]
+            if greedy:
+                write_slot[si] = si
+                gen_idx[si] = len(s.generated) + s.gen_dev
+        # idle/stalled rows: host_mask stays False and their stale
+        # _dev_last token decodes against the scratch page (all-zero
+        # table) — same wasted-FLOPs tradeoff as the unfused path
+        w = self._bucket("decode_w",
+                         max(self.slots[si].pos // self.page_size + 1
+                             for si in ready), self.pages_per_seq)
+        logits, self._dev_last, self._dev_gen, self.pool.pages = \
+            self._fused_decode(
+                self.params, self.pool.pages, self._dev_last,
+                jnp.asarray(host_mask), jnp.asarray(toks),
+                jnp.asarray(poss), jnp.asarray(bt[:, :w]),
+                jnp.asarray(write_slot), jnp.asarray(gen_idx),
+                self._dev_gen)
+        self.stats["device_dispatches"] += 1
+        nxt = None if greedy else self._sample_ready(logits, ready)
+        self.stats["decode_steps"] += 1
+        self.work_clock += len(ready)
+        for si in ready:
+            s = self.slots[si]
+            if greedy:
+                s.gen_dev += 1
+            else:
+                s.generated.append(nxt[si])
+            s.pos += 1
+            self.stats["decode_tokens"] += 1
+            done = (len(s.carried) + len(s.generated) + s.gen_dev
+                    >= s.max_new or s.pos >= self.max_len - 1)
             if done:
                 for pid in s.pages:
                     self.pool.decref(pid)
@@ -1113,7 +1370,7 @@ def make_batcher(cfg, cache: str = "auto", **kw):
         return PagedContinuousBatcher(cfg, **kw)
     if cache == "stacked":
         for k in ("page_size", "num_pages", "sharing", "prefill",
-                  "prefill_token_budget"):
+                  "prefill_token_budget", "fused"):
             kw.pop(k, None)
         return ContinuousBatcher(cfg, **kw)
     raise ValueError(f"unknown cache manager {cache!r}")

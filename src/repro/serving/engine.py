@@ -276,6 +276,7 @@ class TickOrchestrator:
         self.tick_stats = {"ticks": 0, "route_calls": 0, "routed": 0,
                            "decode_ticks": 0, "pool_peak": 0,
                            "admissions": 0, "prefill_dispatches": 0,
+                           "device_dispatches": 0, "tick_dispatches_max": 0,
                            "migrations_started": 0, "migrations": 0,
                            "recomputes": 0, "pages_shipped": 0,
                            "restarts": 0, "failovers": 0,
@@ -708,6 +709,16 @@ class TickOrchestrator:
         self.tick_stats["prefill_dispatches"] = sum(
             b.stats.get("prefill_dispatches", 0)
             for b in self.batchers.values())
+        # device program launches vs logical dispatches: the fused tick
+        # collapses a whole tick's chunk runs + decode into <=2 launches,
+        # and tick_dispatches_max is the per-tick peak across islands —
+        # the deterministic wall-clock proxy the benchmark gates on
+        self.tick_stats["device_dispatches"] = sum(
+            b.stats.get("device_dispatches", 0)
+            for b in self.batchers.values())
+        self.tick_stats["tick_dispatches_max"] = max(
+            [b.stats.get("tick_dispatches_max", 0)
+             for b in self.batchers.values()] or [0])
         # migration outcome totals (live batchers only; failed islands'
         # counters died with them, which is the honest accounting)
         for k, src in (("migrations", "imports"), ("recomputes",
@@ -796,7 +807,7 @@ def build_island_batchers(cfg, registry, cache="auto", params=None,
                           slots_per_capacity_unit=2.0, max_len=96,
                           page_size=16, pool_headroom=1.0, seed=0,
                           temperature=0.0, prefill="chunked",
-                          prefill_token_budget=None):
+                          prefill_token_budget=None, fused=True):
     """Per-SHORE-island continuous batchers with KV pools sized from each
     island's declared ``capacity_units``.
 
@@ -824,7 +835,7 @@ def build_island_batchers(cfg, registry, cache="auto", params=None,
             cfg, cache=cache, params=params, num_slots=slots,
             max_len=max_len, seed=seed, temperature=temperature,
             page_size=page_size, prefill=prefill,
-            prefill_token_budget=prefill_token_budget,
+            prefill_token_budget=prefill_token_budget, fused=fused,
             num_pages=max(2, int(slots * pages_per_seq
                                  * pool_headroom)) + 1)
         if params is None:

@@ -319,6 +319,14 @@ class PagePool:
 
     def register_prefix(self, pid: int, tier: Optional[int], chash: str,
                         fill: int):
+        """Publish page ``pid`` as the canonical holder of a full
+        prompt-prefix chunk. Contract: a registered page must be
+        READABLE by the time any other request's dispatch gathers it —
+        the unfused batcher registers strictly after the chunk write,
+        the fused batcher registers at PLAN time, which is equivalent
+        because the page is written by the same tick's single fused
+        dispatch and a same-dispatch attacher gathers after every
+        layer's scatter."""
         if not self.sharing_enabled or tier is None:
             return
         key = (tier, chash, fill)

@@ -1,0 +1,114 @@
+"""Fused-tick dispatch path: bit-exact parity with the unfused batcher,
+dispatch-count regression bounds, and device-resident stream handling at
+the preemption/sampling boundaries.
+
+The fused path collapses every chunk run of a tick into ONE batched
+prefill dispatch and keeps greedy sampling state device-resident, so a
+tick issues at most two model programs; these tests pin the contract
+that fusion is a pure wall-clock optimization — same tokens, same work
+clock, same sharing telemetry, fewer launches.
+"""
+import pytest
+
+from repro.configs.base import get_config
+from repro.serving.batcher import PagedContinuousBatcher
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("smollm-135m").reduced()
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    import jax
+
+    from repro.models.model import get_model
+    return get_model(cfg).init(jax.random.PRNGKey(0), "float32")
+
+
+PREFIX = "shared clinical preamble for the cohort under review. "
+MIXED = [
+    (PREFIX + "alpha " * 12, 8, 0),
+    (PREFIX + "beta " * 16, 6, 0),
+    ("an unrelated billing request with no shared head", 8, 1),
+    (PREFIX + "gamma " * 4, 10, 0),
+    ("tiny", 5, None),
+    (PREFIX + "delta " * 20, 7, 0),
+]
+
+
+def _run(cfg, params, workload, fused, **kw):
+    kw.setdefault("num_slots", 3)
+    kw.setdefault("max_len", 96)
+    kw.setdefault("page_size", 16)
+    b = PagedContinuousBatcher(cfg, params=params, fused=fused, **kw)
+    rids = [b.submit(p, max_new_tokens=mn, trust_tier=t)
+            for p, mn, t in workload]
+    done = b.run_until_done()
+    return b, [done[r] for r in rids]
+
+
+def test_fused_bitexact_and_workclock_mixed(cfg, params):
+    """Greedy token streams, the virtual work clock and every logical
+    scheduling stat must be identical fused vs unfused on the mixed
+    (long/short, tiered/untiered, shared/private) workload — only the
+    device-launch counters may differ."""
+    bu, outu = _run(cfg, params, MIXED, fused=False)
+    bf, outf = _run(cfg, params, MIXED, fused=True)
+    assert outf == outu
+    assert bf.work_clock == bu.work_clock
+    for key in ("admissions", "prefill_dispatches", "decode_steps",
+                "decode_tokens", "share_hits", "prefix_tokens_skipped",
+                "prefill_chunk_tokens", "preemptions"):
+        assert bf.stats[key] == bu.stats[key], key
+    assert bf.stats["device_dispatches"] < bu.stats["device_dispatches"]
+
+
+def test_fused_bitexact_shared_prefix(cfg, params):
+    """Same-tier prefix sharing (admission attach AND late dispatch-time
+    attach) must survive fusion bit-exactly — same-dispatch cross-row
+    attaches read the writer row's K/V."""
+    wl = [(PREFIX + f"variant {i} " * 3, 6, 2) for i in range(6)]
+    bu, outu = _run(cfg, params, wl, fused=False)
+    bf, outf = _run(cfg, params, wl, fused=True)
+    assert outf == outu
+    assert bf.stats["share_hits"] == bu.stats["share_hits"] > 0
+    assert bf.stats["prefix_tokens_skipped"] == \
+        bu.stats["prefix_tokens_skipped"] > 0
+
+
+def test_fused_tick_dispatch_count_bound(cfg, params):
+    """The regression gate: a fused tick issues at most 3 model programs
+    (1 batched prefill + 1 decode in practice) however many chunk runs
+    the budget admits, while the unfused path launches one per run."""
+    wl = [(f"request number {i} " + "filler " * (4 + 3 * i), 5, i % 3)
+          for i in range(8)]
+    bu, _ = _run(cfg, params, wl, fused=False, num_slots=4,
+                 prefill_token_budget=96)
+    bf, _ = _run(cfg, params, wl, fused=True, num_slots=4,
+                 prefill_token_budget=96)
+    assert bf.stats["tick_dispatches_max"] <= 3
+    assert bf.stats["tick_dispatches_max"] < \
+        bu.stats["tick_dispatches_max"]
+
+
+def test_fused_preemption_parity(cfg, params):
+    """Pool-exhaustion preemption must materialize the victim's
+    device-resident tail into its resume ticket: streams stay identical
+    on a pool small enough to force evictions."""
+    wl = [(f"tiny seed {i}", 40, i % 2) for i in range(4)]
+    bu, outu = _run(cfg, params, wl, fused=False, num_pages=6)
+    bf, outf = _run(cfg, params, wl, fused=True, num_pages=6)
+    assert bf.stats["preemptions"] == bu.stats["preemptions"] > 0
+    assert outf == outu
+
+
+def test_fused_stochastic_parity(cfg, params):
+    """temperature > 0 falls back to host-side per-slot-key sampling but
+    keeps the fused dispatches; the sampled streams must match the
+    unfused path draw for draw."""
+    wl = [(p, mn, t) for p, mn, t in MIXED[:4]]
+    bu, outu = _run(cfg, params, wl, fused=False, temperature=0.9)
+    bf, outf = _run(cfg, params, wl, fused=True, temperature=0.9)
+    assert outf == outu

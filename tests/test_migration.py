@@ -209,7 +209,12 @@ def test_mutated_tail_page_never_reattaches_by_stale_key(cfg, params):
     ra = a.submit(prompt, max_new_tokens=10, trust_tier=2)
     for _ in range(6):
         a.tick()                      # source: further along than dest
-    assert len(a.slots[0].generated) > len(b.slots[0].generated) > 0
+    # decode progress counts the fused path's device-resident tail too
+    def _progress(bb):
+        s = bb.slots[0]
+        return len(s.generated) + s.gen_dev
+
+    assert _progress(a) > _progress(b) > 0
     t = a.freeze_request(ra)
     assert any(r.key is not None and r.fill != r.key[2] for r in t.pages), \
         "setup failed to produce a decode-mutated partial tail page"
@@ -245,6 +250,54 @@ def test_preemption_keeps_generated_tokens(cfg):
     assert tight.preempted_rids
     assert [done[r] for r in rids2] == [base[r] for r in rids]
     assert tight.pool.in_use() == 0 and tight.pool.audit()
+
+
+def test_freeze_mid_fused_tick_serializes_identically(cfg, params):
+    """A request frozen after k ticks of a FUSED batcher must serialize
+    to the same ticket the unfused batcher produces at the same k — same
+    tokens (the fused path materializes its device-resident tail), same
+    context coverage, same page payloads — for every k until completion.
+    The migration wire format must not know which dispatch path ran."""
+    import numpy as np
+
+    from repro.serving.batcher import PagedContinuousBatcher
+
+    def freeze_at(fused, k):
+        b = PagedContinuousBatcher(cfg, params=params, num_slots=2,
+                                   max_len=96, page_size=16,
+                                   prefill_token_budget=16, fused=fused)
+        rids = [b.submit(p, max_new_tokens=5, trust_tier=2)
+                for p in PROMPTS]
+        for _ in range(k):
+            b.tick()
+        return [b.freeze_request(rid) for rid in rids]
+
+    k = 0
+    saw_phases = set()
+    while True:
+        frozen = list(zip(freeze_at(False, k), freeze_at(True, k)))
+        for tu, tf in frozen:
+            assert (tu is None) == (tf is None)
+            if tu is None:
+                continue
+            saw_phases.add(tf.phase)
+            for f in ("prompt", "prompt_ids", "generated", "max_new",
+                      "tier", "kv_tokens", "page_size", "phase"):
+                assert getattr(tf, f) == getattr(tu, f), (k, f)
+            assert len(tf.pages) == len(tu.pages)
+            for pu, pf in zip(tu.pages, tf.pages):
+                assert (pf.tier, pf.key, pf.fill) == (pu.tier, pu.key,
+                                                      pu.fill)
+                assert (pf.data is None) == (pu.data is None)
+                if pu.data is not None:
+                    for lu, lf in zip(pu.data, pf.data):
+                        np.testing.assert_array_equal(np.asarray(lf),
+                                                      np.asarray(lu))
+        if all(t is None for t, _ in frozen):
+            break
+        k += 1
+    assert k > 3
+    assert saw_phases >= {"queued", "prefill", "decode"}
 
 
 # ------------------------------------------------ orchestrator fault injection
