@@ -1,0 +1,156 @@
+"""Access-pattern leakage benchmark: the adversary harness run twice —
+mitigations off (positive control) and on (the hardened stack) — over the
+SAME seeded workloads the serving benchmark uses, plus the
+constant-shape-dispatch bit-exactness/overhead A/B.
+
+Everything here is deterministic (greedy decoding, seeded prompts,
+value-keyed telemetry noise, tick-counted timing), so the gates are
+exact, not statistical:
+
+* ``positive_control_prefix_ge_0p8`` — with mitigations OFF, the
+  prefix-membership attack must reach >= 0.8 accuracy. This keeps the
+  main gate honest: if the harness stops observing anything, this leg
+  fails instead of the mitigated leg passing vacuously.
+* ``positive_control_leaks`` — every attack must beat chance by a clear
+  margin with mitigations off (each channel really is a channel).
+* ``mitigated_le_chance_plus_slack`` — with mitigations ON, every attack
+  accuracy must be <= chance + 0.05.
+* ``bitexact_streams`` / ``work_overhead_le_1p25`` /
+  ``constant_shape_geometry_fixed`` — constant-shape dispatch is a pure
+  geometry change: token streams bit-exact vs the fused default on the
+  tier-1 serving workload, deterministic work clock within 1.25x, and at
+  most one distinct prefill and one distinct decode launch shape.
+
+``--json`` writes the ``BENCH_leakage.json`` artifact (per-signal
+accuracies, normalized risk scores, aggregate LPS for both runs). Failed
+checks exit nonzero — that is the CI gate.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.configs.base import get_config
+from repro.core.workload import tiered_serving_prompts
+from repro.privacy.adversary import Mitigations, run_attack_suite
+from repro.privacy.leakage import leakage_report
+from repro.serving.batcher import make_batcher
+from repro.serving.engine import LocalModelServer
+
+SLACK = 0.05             # mitigated accuracy must be <= chance + SLACK
+POSITIVE_MARGIN = 0.25   # unmitigated accuracy must be >= chance + this
+
+_FAILED_CHECKS: list = []
+
+
+def constant_shape_ab(cfg, params, lines, n_requests=16, max_new=8,
+                      slots=8):
+    """Constant-shape dispatch vs the fused default on the SAME seeded
+    tier-1 workload the serving benchmark's fused-tick A/B runs."""
+    prompts = tiered_serving_prompts(n_requests, seed=7)
+
+    def drive(constant_shape):
+        b = make_batcher(cfg, cache="paged", num_slots=slots, max_len=96,
+                         params=params, constant_shape=constant_shape)
+        rids = [b.submit(p, max_new_tokens=max_new, trust_tier=t)
+                for p, t in prompts]
+        done = b.run_until_done()
+        pre = {s[1:] for s in b.dispatch_shapes if s[0] == "prefill"}
+        dec = {s[1:] for s in b.dispatch_shapes if s[0] == "decode"}
+        label = "constant" if constant_shape else "default"
+        stats = {"streams": [done[r] for r in rids],
+                 "work_clock": b.work_clock,
+                 "ticks": b.stats["ticks"],
+                 "unique_prefill_shapes": len(pre),
+                 "unique_decode_shapes": len(dec)}
+        lines.append((f"leak/shape_{label}", 0.0,
+                      f"work={stats['work_clock']}"
+                      f" ticks={stats['ticks']}"
+                      f" prefill_shapes={len(pre)}"
+                      f" decode_shapes={len(dec)}"))
+        return stats
+
+    base = drive(False)
+    const = drive(True)
+    overhead = const["work_clock"] / max(base["work_clock"], 1)
+    return {
+        "default": {k: v for k, v in base.items() if k != "streams"},
+        "constant": {k: v for k, v in const.items() if k != "streams"},
+        "work_overhead": round(overhead, 4),
+        "bitexact_streams": const["streams"] == base["streams"],
+        "checks": {
+            "bitexact_streams": const["streams"] == base["streams"],
+            "work_overhead_le_1p25": overhead <= 1.25,
+            "constant_shape_geometry_fixed":
+                const["unique_prefill_shapes"] <= 1
+                and const["unique_decode_shapes"] <= 1,
+        },
+    }
+
+
+def run(json_path=None):
+    lines = []
+    cfg = get_config("smollm-135m").reduced()
+    params = LocalModelServer(cfg, max_len=160).params
+
+    suites = {}
+    for label, mit in (("mitigations_off", Mitigations.off()),
+                       ("mitigations_on", Mitigations.on())):
+        results = run_attack_suite(cfg, params, mit)
+        report = leakage_report(results)
+        suites[label] = {"report": report, "results": results}
+        for sig in report["per_signal"]:
+            lines.append((f"leak/{label}/{sig['attack']}", 0.0,
+                          f"signal={sig['signal']}"
+                          f" acc={sig['accuracy']:.2f}"
+                          f" chance={sig['chance']:.2f}"
+                          f" adv={sig['advantage']:.2f}"))
+        lines.append((f"leak/{label}/LPS", 0.0,
+                      f"lps={report['lps']:.3f}"))
+
+    off = suites["mitigations_off"]["results"]
+    on = suites["mitigations_on"]["results"]
+    shape_ab = constant_shape_ab(cfg, params, lines)
+
+    checks = {
+        "positive_control_prefix_ge_0p8":
+            off["prefix_membership"].accuracy >= 0.8,
+        "positive_control_leaks": all(
+            r.accuracy >= r.chance + POSITIVE_MARGIN
+            for r in off.values()),
+        "mitigated_le_chance_plus_slack": all(
+            r.accuracy <= r.chance + SLACK for r in on.values()),
+        **{f"shape/{k}": ok for k, ok in shape_ab["checks"].items()},
+    }
+
+    artifact = {
+        "mitigations_off": suites["mitigations_off"]["report"],
+        "mitigations_on": suites["mitigations_on"]["report"],
+        "constant_shape": {k: v for k, v in shape_ab.items()
+                           if k != "checks"},
+        "slack": SLACK,
+        "positive_margin": POSITIVE_MARGIN,
+        "checks": checks,
+    }
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(artifact, f, indent=2, sort_keys=True)
+        lines.append(("leak/artifact", 0.0, json_path))
+
+    global _FAILED_CHECKS
+    _FAILED_CHECKS = [k for k, ok in checks.items() if not ok]
+    for k in _FAILED_CHECKS:
+        lines.append((f"leak/CHECK_FAILED/{k}", 0.0, "see artifact"))
+    return lines
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the BENCH_leakage.json artifact here")
+    args = ap.parse_args()
+    for row in run(json_path=args.json):
+        print(row)
+    if _FAILED_CHECKS:
+        raise SystemExit(
+            f"leakage acceptance checks failed: {_FAILED_CHECKS}")

@@ -42,7 +42,10 @@ from repro.launch.serve import build_mesh
 from repro.serving.batcher import make_batcher
 from repro.serving.engine import (InferenceEngine, LocalModelServer,
                                   TickOrchestrator)
-from repro.core.workload import healthcare_workload
+from repro.core.workload import (LONG_PROMPT_CHARS, SHARED_HEAD_TOKENS,
+                                 churn_prompts, healthcare_workload,
+                                 mixed_prefill_prompts, shared_head_prompts,
+                                 tiered_serving_prompts)
 
 
 def run(cache_modes=("stacked", "paged"), json_path=None):
@@ -254,18 +257,15 @@ def routed_throughput(cfg, n_requests=16, max_new=8, slots=8,
     return lines, stats, baseline
 
 
-SHARED_HEAD_TOKENS = 64
-
-
 def shared_prefix_ab(cfg, lines, n_requests=8, max_new=6, page_size=16,
                      params=None):
     """Prefix-sharing A/B on the paged pool: 8 requests with a common
-    64-token prompt head. Same trust tier -> shared head pages (hit rate
-    > 0, strictly lower peak occupancy than the sharing-disabled control);
-    mixed tiers -> zero cross-tier sharing by construction."""
-    head = "".join("the patient record header section "[i % 34]
-                   for i in range(SHARED_HEAD_TOKENS))  # 64 byte-tokens
-    prompts = [head + f" case {i}" for i in range(n_requests)]
+    64-token prompt head (the shared seeded-workload builder also drives
+    the leakage benchmark's prefix-membership attack). Same trust tier ->
+    shared head pages (hit rate > 0, strictly lower peak occupancy than
+    the sharing-disabled control); mixed tiers -> zero cross-tier sharing
+    by construction."""
+    _head, prompts = shared_head_prompts(n_requests)
     out = {}
 
     def drive(tiers, sharing, label):
@@ -325,9 +325,6 @@ def shared_prefix_ab(cfg, lines, n_requests=8, max_new=6, page_size=16,
     return out
 
 
-LONG_PROMPT_CHARS = 75            # + BOS = 76 tokens = 5 pages @ 16
-
-
 def mixed_prefill_ab(cfg, lines, params=None, page_size=16, n_long=3,
                      n_short=6, max_new=5):
     """Head-of-line A/B: long prompts submitted AHEAD of short ones, full
@@ -337,9 +334,7 @@ def mixed_prefill_ab(cfg, lines, params=None, page_size=16, n_long=3,
     improvement check is noise-free and gates CI; wall-clock req/s is
     recorded for context."""
     from repro.serving.batcher import make_batcher
-    longs = [(f"case history {i:02d} ") + "y" * (LONG_PROMPT_CHARS - 16)
-             for i in range(n_long)]
-    shorts = [f"vitals {i}" for i in range(n_short)]
+    longs, shorts = mixed_prefill_prompts(n_long, n_short)
     out = {}
 
     def drive(prefill):
@@ -395,9 +390,7 @@ def fused_tick_ab(cfg, lines, params=None, n_requests=16, max_new=8,
     in practice, vs one launch per chunk run + one decode unfused).
     Wall-clock req/s is recorded for trajectory only; the gated proxies
     are all deterministic."""
-    wl = healthcare_workload(n_requests, seed=7)
-    prompts = [(req.query, (1, 2, 3, None)[i % 4])
-               for i, (req, _s) in enumerate(wl)]
+    prompts = tiered_serving_prompts(n_requests, seed=7)
 
     def drive(fused):
         b = make_batcher(cfg, cache="paged", num_slots=slots, max_len=96,
@@ -458,8 +451,7 @@ def churn_ab(cfg, lines, params=None, n_requests=10, max_new=8):
     from repro.serving.engine import TickOrchestrator, build_island_batchers
 
     # mixed sensitivities -> KV tiers 1/2/3 all migrate during the churn
-    prompts = [(f"patient record number {i:02d} with several details",
-                (0.9, 0.6, 0.2)[i % 3]) for i in range(n_requests)]
+    prompts = churn_prompts(n_requests)
 
     def drive(events):
         reg = IslandRegistry()

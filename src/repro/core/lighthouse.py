@@ -4,16 +4,52 @@ Maintains heartbeats over a virtual clock, island discovery (devices
 announce availability when coming online) and the conservative fallback:
 if LIGHTHOUSE itself crashes, WAVES keeps routing against the last cached
 island list (correct but slower to react, per the ablation in Sec XI-D).
+
+Telemetry published here is an observable side channel: raw per-island
+pool counters let a co-tenant correlate page/hit deltas with another
+tenant's requests (the access-pattern leak class the privacy harness in
+``repro.privacy`` attacks). The mesh therefore serves TWO views:
+
+* the **raw view** (``pool_telemetry()`` / ``mesh_prefill_backlog()``
+  with no viewer tier) — per-island, unperturbed, orchestrator/operator
+  only;
+* the **tier-scoped view** (same calls with ``viewer_tier=t``) — a single
+  mesh-wide aggregate over trust tiers the viewer may see (its own tier
+  and less-sensitive ones, i.e. tier' >= t), quantized and perturbed with
+  deterministic value-keyed noise, with no per-island resolution and no
+  work-clock counters (cumulative work deltas re-expose per-request
+  timing even when aggregated).
 """
 from __future__ import annotations
 
+import hashlib
 from dataclasses import dataclass, field
 
 
+@dataclass(frozen=True)
+class TelemetryPolicy:
+    """How pool telemetry is hardened before crossing a trust boundary.
+
+    ``tier_scoped`` gates the aggregation itself (off = positive-control
+    ablation: scoped calls degrade to the raw mesh view). ``noise`` adds
+    deterministic value-keyed perturbation on top of quantization: the
+    reported value is a pure function of (seed, metric, viewer tier, true
+    quantized value), so repeated observation of the same state can't be
+    averaged away, yet CI gates stay bit-deterministic.
+    """
+    tier_scoped: bool = True
+    noise: bool = True
+    quantum_pages: int = 4
+    quantum_tokens: int = 64
+    seed: int = 0
+
+
 class Lighthouse:
-    def __init__(self, registry, heartbeat_timeout_s: float = 5.0):
+    def __init__(self, registry, heartbeat_timeout_s: float = 5.0,
+                 telemetry_policy: TelemetryPolicy | None = None):
         self.registry = registry
         self.timeout = heartbeat_timeout_s
+        self.telemetry_policy = telemetry_policy or TelemetryPolicy()
         self.clock = 0.0
         self._last_beat: dict[str, float] = {}
         self._cache: list = []
@@ -61,13 +97,79 @@ class Lighthouse:
         if island_id in self.registry:
             self._pool_stats[island_id] = dict(stats, reported_at=self.clock)
 
-    def mesh_prefill_backlog(self) -> int:
-        """Total undispatched prefill tokens across reporting islands."""
-        return sum(int(s.get("prefill_backlog", 0))
-                   for s in self._pool_stats.values())
+    def _report_value(self, metric: str, value: int, quantum: int,
+                      viewer_tier: int) -> int:
+        """Harden one scalar for a scoped viewer: round UP to the policy
+        quantum (occupancy is never understated), then add a deterministic
+        offset in [0, quantum) keyed by (seed, metric, viewer, quantized
+        value). Same true state => same report, so deterministic CI can
+        still gate on it — but the offset carries no information about the
+        sub-quantum truth and cannot be averaged out across observations."""
+        pol = self.telemetry_policy
+        q = max(1, int(quantum))
+        v = (int(value) + q - 1) // q * q
+        if pol.noise and q > 1:
+            h = hashlib.sha256(
+                f"{pol.seed}:{metric}:{viewer_tier}:{v}".encode()).digest()
+            v += int.from_bytes(h[:4], "little") % q
+        return v
 
-    def pool_telemetry(self) -> dict:
-        return {iid: dict(s) for iid, s in self._pool_stats.items()}
+    def mesh_prefill_backlog(self, viewer_tier: int | None = None) -> int:
+        """Total undispatched prefill tokens across reporting islands.
+        With ``viewer_tier`` set, only tiers the viewer may see contribute
+        and the sum is quantized/noised per the telemetry policy."""
+        if viewer_tier is None:
+            return sum(int(s.get("prefill_backlog", 0))
+                       for s in self._pool_stats.values())
+        if not self.telemetry_policy.tier_scoped:
+            return self.mesh_prefill_backlog()
+        total = 0
+        for s in self._pool_stats.values():
+            for t, d in (s.get("tiers") or {}).items():
+                if isinstance(t, int) and t >= viewer_tier:
+                    total += int(d.get("prefill_backlog", 0))
+        return self._report_value("mesh_prefill_backlog", total,
+                                  self.telemetry_policy.quantum_tokens,
+                                  viewer_tier)
+
+    def pool_telemetry(self, viewer_tier: int | None = None) -> dict:
+        """Mesh pool telemetry.
+
+        ``viewer_tier=None`` (orchestrator/operator) returns the raw
+        per-island dicts. ``viewer_tier=t`` returns the tier-scoped tenant
+        view: ONE mesh-wide aggregate summing each island's per-tier rows
+        over tiers visible to the viewer (tier' >= t — its own tier and
+        less-sensitive ones), quantized + value-key-noised. The scoped
+        view deliberately omits per-island resolution, untiered/system
+        pages, and all work-clock counters."""
+        if viewer_tier is None:
+            return {iid: dict(s) for iid, s in self._pool_stats.items()}
+        if not self.telemetry_policy.tier_scoped:
+            return self.pool_telemetry()
+        agg = {"pages_in_use": 0, "share_hits": 0, "share_misses": 0,
+               "prefill_backlog": 0}
+        for s in self._pool_stats.values():
+            for t, d in (s.get("tiers") or {}).items():
+                if not isinstance(t, int) or t < viewer_tier:
+                    continue
+                for k in agg:
+                    agg[k] += int(d.get(k, 0))
+        pol = self.telemetry_policy
+        return {
+            "viewer_tier": viewer_tier,
+            "pages_in_use": self._report_value(
+                "pages_in_use", agg["pages_in_use"], pol.quantum_pages,
+                viewer_tier),
+            "share_hits": self._report_value(
+                "share_hits", agg["share_hits"], pol.quantum_pages,
+                viewer_tier),
+            "share_misses": self._report_value(
+                "share_misses", agg["share_misses"], pol.quantum_pages,
+                viewer_tier),
+            "prefill_backlog": self._report_value(
+                "prefill_backlog", agg["prefill_backlog"],
+                pol.quantum_tokens, viewer_tier),
+        }
 
     def report_migration(self, island_id: str, stats: dict):
         """Publish an island's cumulative migration counters (requests

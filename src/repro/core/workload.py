@@ -63,6 +63,52 @@ def healthcare_workload(n: int = 1000, seed: int = 0,
     return out
 
 
+# ------------------------------------------------- seeded serving prompts
+#
+# The serving benchmark's A/B workloads and the privacy leakage
+# benchmark's attack/bit-exactness workloads are built from the SAME
+# generators below, so perf gates and attack gates can never silently
+# diverge onto different request mixes.
+
+SHARED_HEAD_TOKENS = 64          # shared head: 64 byte-tokens = 4 pages
+LONG_PROMPT_CHARS = 75
+
+
+def shared_head_prompts(n: int, head_tokens: int = SHARED_HEAD_TOKENS):
+    """``n`` prompts sharing an identical ``head_tokens``-byte head
+    followed by a distinct tail. Returns ``(head, prompts)``."""
+    head = "".join("the patient record header section "[i % 34]
+                   for i in range(head_tokens))
+    return head, [head + f" case {i}" for i in range(n)]
+
+
+def mixed_prefill_prompts(n_long: int = 3, n_short: int = 6,
+                          long_chars: int = LONG_PROMPT_CHARS):
+    """Head-of-line-blocking mix: a few long prompts ahead of many short
+    ones. Returns ``(longs, shorts)``."""
+    longs = [f"case history {i:02d} " + "y" * (long_chars - 16)
+             for i in range(n_long)]
+    shorts = [f"vitals {i}" for i in range(n_short)]
+    return longs, shorts
+
+
+def churn_prompts(n: int = 10):
+    """Mixed-sensitivity prompts for the island-churn / migration runs.
+    Returns ``[(prompt, sensitivity_override), ...]``."""
+    return [(f"patient record number {i:02d} with several details",
+             (0.9, 0.6, 0.2)[i % 3]) for i in range(n)]
+
+
+def tiered_serving_prompts(n: int = 16, seed: int = 7):
+    """Seeded healthcare prompts with a rotating trust-tier assignment
+    (including untiered). Returns ``[(prompt, trust_tier), ...]`` — the
+    fused-tick A/B and the constant-shape bit-exactness A/B both run
+    exactly this workload."""
+    wl = healthcare_workload(n, seed=seed)
+    return [(req.query, (1, 2, 3, None)[i % 4])
+            for i, (req, _kind) in enumerate(wl)]
+
+
 def legal_workload(n: int = 200, seed: int = 0):
     """Scenario C: all case-law queries require the firm's vector index."""
     rng = random.Random(seed)

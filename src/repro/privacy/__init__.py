@@ -1,0 +1,15 @@
+"""Access-pattern privacy: adversary harness + per-signal leakage scoring.
+
+``adversary`` drives the real serving stack with an attacker tenant
+interleaved against victims and scores each observable channel's attack
+accuracy; ``leakage`` turns those accuracies into normalized per-signal
+risk scores and an aggregate LPS-style figure.
+"""
+from repro.privacy.adversary import (AttackResult, AttackStack,
+                                     Mitigations, run_attack_suite)
+from repro.privacy.leakage import (CHANNEL_WEIGHTS, advantage,
+                                   leakage_report)
+
+__all__ = ["AttackResult", "AttackStack", "Mitigations",
+           "run_attack_suite", "CHANNEL_WEIGHTS", "advantage",
+           "leakage_report"]

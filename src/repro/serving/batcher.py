@@ -166,6 +166,9 @@ class _BatcherBase:
         # proxy for dispatch wall time — TTFT measured against it exposes
         # head-of-line blocking that virtual ticks cannot see.
         self.work_clock = 0
+        # work_clock split by request trust tier (None = untiered); feeds
+        # the lighthouse's tier-scoped telemetry aggregation
+        self.tier_work: dict = {}
         # rid -> lifecycle record (submit/admit/first-token ticks & work)
         self.request_log: dict[int, dict] = {}
 
@@ -263,10 +266,17 @@ class _BatcherBase:
             rec["admit_tick"] = self.stats["ticks"]
             rec["prompt_tokens"] = prompt_tokens
 
-    def _note_prefill_dispatch(self, tokens):
+    def _note_prefill_dispatch(self, tokens, tier=None):
         self.stats["prefills"] += 1
         self.stats["prefill_dispatches"] += 1
         self.work_clock += tokens
+        self.tier_work[tier] = self.tier_work.get(tier, 0) + tokens
+
+    def _note_decode_work(self, slot_indices):
+        self.work_clock += len(slot_indices)
+        for si in slot_indices:
+            t = self.slots[si].tier
+            self.tier_work[t] = self.tier_work.get(t, 0) + 1
 
     def _note_first_token(self, rid):
         rec = self.request_log.get(rid)
@@ -396,7 +406,7 @@ class ContinuousBatcher(_BatcherBase):
             if ticket is not None and ticket.resumes_compute():
                 self.migration_stats["recomputes"] += 1
             self._note_admission(rid, len(ids))
-            self._note_prefill_dispatch(len(ids))
+            self._note_prefill_dispatch(len(ids), tier)
             if not pending:
                 self._note_first_token(rid)
 
@@ -461,7 +471,7 @@ class ContinuousBatcher(_BatcherBase):
         self.stats["device_dispatches"] += 1
         nxt = self._sample_ready(logits[:, 0, :], active)
         self.stats["decode_steps"] += 1
-        self.work_clock += len(active)
+        self._note_decode_work(active)
         for si in active:
             s = self.slots[si]
             s.generated.append(nxt[si])
@@ -495,7 +505,8 @@ class PagedContinuousBatcher(_BatcherBase):
     def __init__(self, cfg, params=None, num_slots=4, max_len=256,
                  seed=0, dtype="float32", temperature=0.0, page_size=16,
                  num_pages=None, sharing=True, prefill="chunked",
-                 prefill_token_budget=None, fused=True):
+                 prefill_token_budget=None, fused=True,
+                 constant_shape=False):
         if not paged_supported(cfg):
             raise ValueError(
                 f"paged KV cache requires a full-history attention-only "
@@ -504,6 +515,10 @@ class PagedContinuousBatcher(_BatcherBase):
                 f"cache='stacked' for this config")
         if prefill not in ("chunked", "full"):
             raise ValueError(f"unknown prefill mode {prefill!r}")
+        if constant_shape and not (fused and prefill == "chunked"):
+            raise ValueError(
+                "constant_shape requires the fused chunked-prefill path "
+                "(fused=True, prefill='chunked')")
         super().__init__(cfg, params, num_slots, max_len, seed, dtype,
                          temperature)
         self.page_size = page_size
@@ -549,6 +564,24 @@ class PagedContinuousBatcher(_BatcherBase):
         # (rows / chunk pages / block-table widths): re-dispatching into an
         # already-compiled larger bucket beats compiling a tighter one
         self._buckets: dict[str, set] = {}
+        # opt-in constant-shape dispatch (privacy hardening): every bucket
+        # pins to its per-kind maximum, so dispatch geometry carries no
+        # information about which requests (or how much of them) were
+        # served — pow2 bucketing taken to its fixed point. Padding stays
+        # exact-zero masked, so streams are bit-exact vs the default, and
+        # the work clock counts only real tokens, so the deterministic
+        # perf gates see the true cost, not the padding.
+        self.constant_shape = bool(constant_shape)
+        self._const_caps = {"rows": num_slots,
+                            "chunk": self._chunk_pages_canon,
+                            "prefill_w": self.pages_per_seq,
+                            "decode_w": self.pages_per_seq}
+        # per-tick dispatch geometry log: ("prefill", rows, chunk_pages,
+        # table_width) / ("decode", slots, table_width). This IS the
+        # observable the shape side channel reads (a co-tenant can infer
+        # launch geometry from timing/power even without this log), so it
+        # is deliberately public and the adversary harness consumes it.
+        self.dispatch_shapes: list = []
         self.stats.update({"share_hits": 0, "cow_copies": 0, "stalls": 0,
                            "preemptions": 0, "rejected_too_large": 0,
                            "prefix_tokens_skipped": 0,
@@ -562,8 +595,18 @@ class PagedContinuousBatcher(_BatcherBase):
         new shape. Persisted across ticks, so steady-state serving
         converges on a handful of compiled programs per kind. Padding is
         numerically free: padded rows/pages write only the scratch page
-        and masked attention positions contribute exact zeros."""
+        and masked attention positions contribute exact zeros.
+
+        ``constant_shape`` pins every kind to its per-kind maximum
+        instead: one compiled program per kind, and dispatch geometry
+        that is victim-independent by construction (the privacy-hardened
+        mode the leakage benchmark gates on)."""
         need = max(1, min(need, cap))
+        if self.constant_shape:
+            fixed = self._const_caps[kind]
+            assert need <= fixed, \
+                f"{kind} dispatch ({need}) overflows constant shape {fixed}"
+            return fixed
         want = min(1 << (need - 1).bit_length(), cap)
         used = self._buckets.setdefault(kind, set())
         if want not in used:
@@ -617,8 +660,7 @@ class PagedContinuousBatcher(_BatcherBase):
                 ids = self._encode(prompt, max_new)
                 carried, pending = [], []
             chunks = prefix_chunk_hashes(ids, self.page_size)
-            hits0 = self.pool.stats["share_hits"]
-            miss0 = self.pool.stats["share_misses"]
+            counters0 = self.pool.snapshot_share_counters()
             shared = []
             for chash, fill in chunks:
                 pid = self.pool.lookup_prefix(tier, chash, fill)
@@ -646,8 +688,7 @@ class PagedContinuousBatcher(_BatcherBase):
                 # reads this as eviction pressure and routes around us.
                 # Nothing attached, so the probe must not count toward the
                 # share-hit telemetry (retries would inflate it every tick)
-                self.pool.stats["share_hits"] = hits0
-                self.pool.stats["share_misses"] = miss0
+                self.pool.restore_share_counters(counters0)
                 self.pool.stats["blocked"] += 1
                 self.blocked_last_tick += 1
                 break
@@ -694,7 +735,7 @@ class PagedContinuousBatcher(_BatcherBase):
             if ticket is not None and ticket.resumes_compute():
                 self.migration_stats["recomputes"] += 1
             self._note_admission(rid, len(ids))
-            self._note_prefill_dispatch(len(ids))
+            self._note_prefill_dispatch(len(ids), tier)
             if not pending:
                 self._note_first_token(rid)
 
@@ -741,19 +782,17 @@ class PagedContinuousBatcher(_BatcherBase):
         chunks = prefix_chunk_hashes(ids, self.page_size)
         # the admission probe's counter side effects are always rolled
         # back: every chunk is accounted exactly ONCE at resolution —
-        # admission attaches via the explicit += below, everything
+        # admission attaches via the explicit re-credit below, everything
         # else (late attach / fresh miss) by the dispatch-time
         # re-probe — so retries and re-probes can't dilute hit_rate
-        hits0 = self.pool.stats["share_hits"]
-        miss0 = self.pool.stats["share_misses"]
+        counters0 = self.pool.snapshot_share_counters()
         shared = []
         for chash, fill in chunks:
             pid = self.pool.lookup_prefix(tier, chash, fill)
             if pid is None:
                 break
             shared.append(pid)
-        self.pool.stats["share_hits"] = hits0
-        self.pool.stats["share_misses"] = miss0
+        self.pool.restore_share_counters(counters0)
         # same alone-fit rejection rule as the monolithic path: context
         # plus every still-owed decode token must fit max_len (a resumed
         # request only owes max_new minus what it already generated) and
@@ -780,7 +819,7 @@ class PagedContinuousBatcher(_BatcherBase):
         n_fresh = sum(1 for (j, _h, _f) in plan if j >= len(shared))
         if self.pool.free_count() - self.reserved < n_fresh:
             return "blocked"
-        self.pool.stats["share_hits"] += len(shared)
+        self.pool.note_admission_attach(tier, len(shared))
         for pid in shared:
             self.pool.incref(pid)
         self.reserved += n_fresh
@@ -911,6 +950,12 @@ class PagedContinuousBatcher(_BatcherBase):
                     budget -= self._advance_prefill(si, budget)
                 self._prefill_rr = (si + 1) % n
                 progress = True
+            if self.constant_shape:
+                # one round-robin pass max: at most one planned row per
+                # slot, so the fused prefill's row count can pin to
+                # num_slots (leftover budget rolls to the next tick's
+                # pass — throughput cost, never correctness)
+                break
         if rows:
             self._execute_prefill_rows(rows)
 
@@ -1008,7 +1053,7 @@ class PagedContinuousBatcher(_BatcherBase):
             if dst != SCRATCH_PAGE:
                 self.pool.register_prefix(dst, s.tier, chash, fill)
         self.stats["prefill_chunk_tokens"] += gtok
-        self._note_prefill_dispatch(gtok)
+        self._note_prefill_dispatch(gtok, s.tier)
         row = {"si": si, "group": group,
                "start": group[0][0] * self.page_size,
                "bt": self.block_tables[si].copy(),
@@ -1031,12 +1076,14 @@ class PagedContinuousBatcher(_BatcherBase):
         rows write only the scratch page and emit nothing, and masked
         attention keeps real rows away from their garbage."""
         ps = self.page_size
-        r_n = self._bucket("rows", len(rows), 1 << 16)
+        r_n = self._bucket("rows", len(rows),
+                           self.num_slots if self.constant_shape else 1 << 16)
         c_n = self._bucket("chunk", max(len(r["group"]) for r in rows),
                            self._chunk_pages_canon)
         w_n = self._bucket("prefill_w",
                            max(r["group"][-1][0] for r in rows) + 1,
                            self.pages_per_seq)
+        self.dispatch_shapes.append(("prefill", r_n, c_n, w_n))
         toks = np.zeros((r_n, c_n * ps), np.int32)
         starts = np.zeros(r_n, np.int32)
         bt = np.zeros((r_n, w_n), np.int32)
@@ -1084,6 +1131,7 @@ class PagedContinuousBatcher(_BatcherBase):
         start = group[0][0] * ps
         c = min(1 << (len(group) - 1).bit_length(), self._chunk_pages_canon)
         w = min(1 << group[-1][0].bit_length(), self.pages_per_seq)
+        self.dispatch_shapes.append(("prefill", 1, c, w))
         toks = np.zeros((1, c * ps), np.int32)
         dst = np.zeros(c, np.int32)                         # pad -> scratch
         fills = 0
@@ -1097,7 +1145,7 @@ class PagedContinuousBatcher(_BatcherBase):
             jnp.asarray(dst))
         self.stats["device_dispatches"] += 1
         self.stats["prefill_chunk_tokens"] += fills
-        self._note_prefill_dispatch(fills)
+        self._note_prefill_dispatch(fills, s.tier)
         return logits
 
     # ----------------------------------------------------------- migration
@@ -1141,6 +1189,42 @@ class PagedContinuousBatcher(_BatcherBase):
                 ln = self._enc_len[rid] = len(self._encode(p, mn))
             queued += ln
         return pending + queued
+
+    def prefill_backlog_by_tier(self) -> dict:
+        """``prefill_backlog_tokens`` split by request trust tier (the
+        per-tier rows the lighthouse's tier-scoped view aggregates)."""
+        out: dict = {}
+        for s in self.slots:
+            if s.active:
+                pend = sum(fill for (_j, _h, fill)
+                           in s.chunks[s.next_chunk:])
+                if pend:
+                    out[s.tier] = out.get(s.tier, 0) + pend
+        for rid, p, mn, t in self.queue:
+            ln = self._enc_len.get(rid)
+            if ln is None:
+                ln = self._enc_len[rid] = len(self._encode(p, mn))
+            out[t] = out.get(t, 0) + ln
+        return out
+
+    def tier_telemetry(self) -> dict:
+        """Per-trust-tier telemetry rows for this island: pool pages and
+        sharing counters, prefill backlog and work, each attributed to the
+        tier of the request that caused them. This (not the raw pool
+        counters) is what ``report_pool`` publishes for cross-boundary
+        aggregation — ``work`` stays in the row for the operator but the
+        lighthouse's scoped view never forwards it to tenants."""
+        pool_t = self.pool.tier_telemetry()
+        backlog = self.prefill_backlog_by_tier()
+        out = {}
+        for t in set(pool_t) | set(backlog) | set(self.tier_work):
+            p = pool_t.get(t, {})
+            out[t] = {"pages_in_use": p.get("pages_in_use", 0),
+                      "share_hits": p.get("share_hits", 0),
+                      "share_misses": p.get("share_misses", 0),
+                      "prefill_backlog": backlog.get(t, 0),
+                      "work": self.tier_work.get(t, 0)}
+        return out
 
     # ------------------------------------------------------------- decode
     def _decode_alloc(self, tier):
@@ -1270,13 +1354,14 @@ class PagedContinuousBatcher(_BatcherBase):
         # per width, bounded by pages_per_seq)
         n_live = max(self.slots[si].pos // self.page_size + 1
                      for si in ready)
+        self.dispatch_shapes.append(("decode", self.num_slots, n_live))
         logits, self.pool.pages = self._decode_all(
             self.params, self.pool.pages, jnp.asarray(toks),
             jnp.asarray(poss), jnp.asarray(bt[:, :n_live]))
         self.stats["device_dispatches"] += 1
         nxt = self._sample_ready(logits, ready)
         self.stats["decode_steps"] += 1
-        self.work_clock += len(ready)
+        self._note_decode_work(ready)
         for si in ready:
             s = self.slots[si]
             s.generated.append(nxt[si])
@@ -1327,6 +1412,7 @@ class PagedContinuousBatcher(_BatcherBase):
         w = self._bucket("decode_w",
                          max(self.slots[si].pos // self.page_size + 1
                              for si in ready), self.pages_per_seq)
+        self.dispatch_shapes.append(("decode", self.num_slots, w))
         logits, self._dev_last, self._dev_gen, self.pool.pages = \
             self._fused_decode(
                 self.params, self.pool.pages, self._dev_last,
@@ -1337,7 +1423,7 @@ class PagedContinuousBatcher(_BatcherBase):
         self.stats["device_dispatches"] += 1
         nxt = None if greedy else self._sample_ready(logits, ready)
         self.stats["decode_steps"] += 1
-        self.work_clock += len(ready)
+        self._note_decode_work(ready)
         for si in ready:
             s = self.slots[si]
             if greedy:
@@ -1370,7 +1456,7 @@ def make_batcher(cfg, cache: str = "auto", **kw):
         return PagedContinuousBatcher(cfg, **kw)
     if cache == "stacked":
         for k in ("page_size", "num_pages", "sharing", "prefill",
-                  "prefill_token_budget", "fused"):
+                  "prefill_token_budget", "fused", "constant_shape"):
             kw.pop(k, None)
         return ContinuousBatcher(cfg, **kw)
     raise ValueError(f"unknown cache manager {cache!r}")

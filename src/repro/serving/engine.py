@@ -695,10 +695,17 @@ class TickOrchestrator:
                 waves.tide.report_pool_pressure(
                     iid, kv_pool.occupancy(), blocked=blocked,
                     prefill_backlog=backlog)
+                # the raw counters plus the per-tier rows: the lighthouse
+                # keeps the raw view for the orchestrator/operator and
+                # serves tenants only the tier-scoped aggregate of the
+                # ``tiers`` rows (work_clock never crosses that boundary)
+                tiers_fn = getattr(b, "tier_telemetry", None)
                 waves.lighthouse.report_pool(iid, dict(
                     kv_pool.telemetry(), prefill_backlog=backlog,
                     prefix_tokens_skipped=b.stats.get(
-                        "prefix_tokens_skipped", 0)))
+                        "prefix_tokens_skipped", 0),
+                    work_clock=b.work_clock,
+                    tiers=tiers_fn() if tiers_fn is not None else {}))
             mig = getattr(b, "migration_stats", None)
             if mig is not None and any(mig.values()):
                 waves.lighthouse.report_migration(iid, mig)
@@ -807,7 +814,8 @@ def build_island_batchers(cfg, registry, cache="auto", params=None,
                           slots_per_capacity_unit=2.0, max_len=96,
                           page_size=16, pool_headroom=1.0, seed=0,
                           temperature=0.0, prefill="chunked",
-                          prefill_token_budget=None, fused=True):
+                          prefill_token_budget=None, fused=True,
+                          constant_shape=False):
     """Per-SHORE-island continuous batchers with KV pools sized from each
     island's declared ``capacity_units``.
 
@@ -836,6 +844,7 @@ def build_island_batchers(cfg, registry, cache="auto", params=None,
             max_len=max_len, seed=seed, temperature=temperature,
             page_size=page_size, prefill=prefill,
             prefill_token_budget=prefill_token_budget, fused=fused,
+            constant_shape=constant_shape,
             num_pages=max(2, int(slots * pages_per_seq
                                  * pool_headroom)) + 1)
         if params is None:

@@ -214,6 +214,11 @@ class PagePool:
                       "peak_in_use": 0, "exported_pages": 0,
                       "imported_pages": 0, "import_attach_hits": 0,
                       "import_tier_mismatch": 0, "import_refused": 0}
+        # per-trust-tier counters backing the tier-scoped telemetry view:
+        # a viewer must never need the raw per-island counters to know its
+        # OWN tier's sharing behaviour, and the aggregated view must be
+        # computable without walking page metadata on every report
+        self.tier_stats: dict = {}
         self.pages = None
         self._write_pages_fn = None
         self._copy_page_fn = None
@@ -259,6 +264,62 @@ class PagePool:
         return walk(spec)
 
     # ------------------------------------------------------------ accounting
+    def _tstat(self, tier) -> dict:
+        d = self.tier_stats.get(tier)
+        if d is None:
+            d = self.tier_stats[tier] = {"allocs": 0, "share_hits": 0,
+                                         "share_misses": 0}
+        return d
+
+    def snapshot_share_counters(self):
+        """Share-hit/miss counters (global + per tier), for callers that
+        probe ``lookup_prefix`` speculatively — admission planning and
+        migration import — and must roll the counters back so telemetry
+        reflects only committed sharing decisions."""
+        return (self.stats["share_hits"], self.stats["share_misses"],
+                {t: (d["share_hits"], d["share_misses"])
+                 for t, d in self.tier_stats.items()})
+
+    def restore_share_counters(self, snap):
+        hits, misses, tiers = snap
+        self.stats["share_hits"] = hits
+        self.stats["share_misses"] = misses
+        for t, d in self.tier_stats.items():
+            h, m = tiers.get(t, (0, 0))
+            d["share_hits"], d["share_misses"] = h, m
+
+    def note_admission_attach(self, tier, n: int):
+        """Count ``n`` admission-time prefix attaches (chunked admission
+        rolls back its planning probes and re-credits only the chunks it
+        actually attached to)."""
+        if n:
+            self.stats["share_hits"] += n
+            self._tstat(tier)["share_hits"] += n
+
+    def in_use_by_tier(self) -> dict:
+        """Live page counts grouped by the trust tier tag on each page."""
+        out: dict = {}
+        for pid in range(1, self.num_pages):
+            if self.refcount[pid] > 0:
+                t = self._meta[pid].tier
+                out[t] = out.get(t, 0) + 1
+        return out
+
+    def tier_telemetry(self) -> dict:
+        """Per-trust-tier slice of the pool counters. This is the ONLY
+        pool view that may cross a trust boundary: the lighthouse's
+        tier-scoped telemetry aggregates these per-tier rows over the mesh
+        so a tenant never sees another tier's (or island's) raw counters."""
+        in_use = self.in_use_by_tier()
+        out = {}
+        for t in set(in_use) | set(self.tier_stats):
+            s = self.tier_stats.get(t, {})
+            out[t] = {"pages_in_use": in_use.get(t, 0),
+                      "allocs": s.get("allocs", 0),
+                      "share_hits": s.get("share_hits", 0),
+                      "share_misses": s.get("share_misses", 0)}
+        return out
+
     def in_use(self) -> int:
         """Allocated pages (excluding the reserved scratch page)."""
         return self.num_pages - 1 - len(self._free)
@@ -281,6 +342,7 @@ class PagePool:
         self.refcount[pid] = 1
         self._meta[pid] = _PageMeta(tier=tier)
         self.stats["allocs"] += 1
+        self._tstat(tier)["allocs"] += 1
         self.stats["peak_in_use"] = max(self.stats["peak_in_use"],
                                         self.in_use())
         return pid
@@ -312,9 +374,11 @@ class PagePool:
         pid = self._prefix_index.get((tier, chash, fill))
         if pid is None:
             self.stats["share_misses"] += 1
+            self._tstat(tier)["share_misses"] += 1
             return None
         assert self._meta[pid].tier == tier      # impossible by construction
         self.stats["share_hits"] += 1
+        self._tstat(tier)["share_hits"] += 1
         return pid
 
     def register_prefix(self, pid: int, tier: Optional[int], chash: str,
@@ -526,16 +590,14 @@ def import_request(pool: PagePool, records, tier: Optional[int]):
             pool.stats["import_tier_mismatch"] += 1
             pool.stats["import_refused"] += 1
             return None
-    hits0 = pool.stats["share_hits"]
-    miss0 = pool.stats["share_misses"]
+    counters0 = pool.snapshot_share_counters()
     got: list[tuple[int, bool]] = []
     copies: list[tuple[int, PageRecord]] = []
 
     def rollback():
         for pid, _ in got:
             pool.decref(pid)
-        pool.stats["share_hits"] = hits0
-        pool.stats["share_misses"] = miss0
+        pool.restore_share_counters(counters0)
         pool.stats["import_refused"] += 1
         return None
 

@@ -104,6 +104,33 @@ def test_fused_preemption_parity(cfg, params):
     assert outf == outu
 
 
+def test_constant_shape_bitexact_with_fixed_geometry(cfg, params):
+    """Constant-shape dispatch (the access-pattern-leakage mitigation)
+    pads every launch to one fixed prefill and one fixed decode geometry;
+    it must stay a pure shape change: identical greedy streams on the
+    mixed workload, and a deterministic work clock that counts only real
+    tokens (so padding costs launches nothing on the gated proxy)."""
+    bf, outf = _run(cfg, params, MIXED, fused=True)
+    bc, outc = _run(cfg, params, MIXED, fused=True, constant_shape=True)
+    assert outc == outf
+    pre = {s[1:] for s in bc.dispatch_shapes if s[0] == "prefill"}
+    dec = {s[1:] for s in bc.dispatch_shapes if s[0] == "decode"}
+    assert len(pre) <= 1 and len(dec) <= 1, (pre, dec)
+    if bc.stats["preemptions"] == bf.stats["preemptions"]:
+        assert bc.work_clock == bf.work_clock
+    else:                       # scheduling drift may shift recompute
+        assert bc.work_clock <= 1.25 * bf.work_clock
+
+
+def test_constant_shape_requires_fused_chunked_path(cfg):
+    with pytest.raises(ValueError, match="constant_shape"):
+        PagedContinuousBatcher(cfg, num_slots=2, max_len=64,
+                               fused=False, constant_shape=True)
+    with pytest.raises(ValueError, match="constant_shape"):
+        PagedContinuousBatcher(cfg, num_slots=2, max_len=64,
+                               prefill="full", constant_shape=True)
+
+
 def test_fused_stochastic_parity(cfg, params):
     """temperature > 0 falls back to host-side per-slot-key sampling but
     keeps the fused dispatches; the sampled streams must match the

@@ -35,6 +35,83 @@ def test_audit_catches_tampered_accounting():
         p.audit()
 
 
+def test_audit_catches_free_list_duplicate():
+    p = PagePool(num_pages=4)
+    pid = p.alloc(tier=1)
+    p.decref(pid)
+    p._free.append(pid)
+    with pytest.raises(AssertionError, match="free list dup"):
+        p.audit()
+
+
+def test_audit_catches_freed_page_keeping_metadata():
+    """A freed page that kept its tier tag could later be handed to a
+    different tier with stale trust labeling — audit must trip."""
+    p = PagePool(num_pages=4)
+    pid = p.alloc(tier=1)
+    p.decref(pid)
+    p._meta[pid].tier = 2
+    with pytest.raises(AssertionError, match="kept metadata"):
+        p.audit()
+
+
+def test_audit_catches_index_meta_disagreement():
+    p = PagePool(num_pages=4, page_size=4)
+    (chash, fill), = prefix_chunk_hashes([1, 2, 3, 4], 4)
+    pid = p.alloc(2)
+    p.register_prefix(pid, 2, chash, fill)
+    p._meta[pid].key = (2, "bogus", fill)
+    with pytest.raises(AssertionError, match="index/meta disagree"):
+        p.audit()
+
+
+def test_audit_catches_cross_tier_index_entry():
+    """Tier-tag corruption AFTER registration (the migration-import bug
+    class): the index says tier 2, the page claims tier 3."""
+    p = PagePool(num_pages=4, page_size=4)
+    (chash, fill), = prefix_chunk_hashes([1, 2, 3, 4], 4)
+    pid = p.alloc(2)
+    p.register_prefix(pid, 2, chash, fill)
+    p._meta[pid].tier = 3
+    with pytest.raises(AssertionError, match="cross-tier index entry"):
+        p.audit()
+
+
+def test_audit_catches_index_pointing_at_freed_page():
+    p = PagePool(num_pages=4, page_size=4)
+    p._prefix_index[(1, "dead", 4)] = 2     # page 2 was never allocated
+    with pytest.raises(AssertionError, match="points at freed"):
+        p.audit()
+
+
+def test_per_tier_counters_and_snapshot_restore():
+    """Per-tier telemetry splits allocs/hits/misses/occupancy by trust
+    tier, and the snapshot/restore pair (used to roll back speculative
+    admission probes) restores BOTH the global and per-tier counters."""
+    p = PagePool(num_pages=8, page_size=4)
+    (chash, fill), = prefix_chunk_hashes([1, 2, 3, 4], 4)
+    pid = p.alloc(1)
+    p.register_prefix(pid, 1, chash, fill)
+    assert p.lookup_prefix(1, chash, fill) == pid     # tier-1 hit
+    assert p.lookup_prefix(1, "nope", 4) is None      # tier-1 miss
+    p.alloc(3)
+    t = p.tier_telemetry()
+    assert t[1] == {"pages_in_use": 1, "allocs": 1, "share_hits": 1,
+                    "share_misses": 1}
+    assert t[3] == {"pages_in_use": 1, "allocs": 1, "share_hits": 0,
+                    "share_misses": 0}
+
+    snap = p.snapshot_share_counters()
+    p.lookup_prefix(1, chash, fill)
+    p.lookup_prefix(3, "probe", 4)
+    assert p.tier_telemetry()[1]["share_hits"] == 2
+    p.restore_share_counters(snap)
+    assert p.stats["share_hits"] == 1 and p.stats["share_misses"] == 1
+    assert p.tier_telemetry()[1]["share_hits"] == 1
+    assert p.tier_telemetry()[3]["share_misses"] == 0
+    p.audit()
+
+
 def test_double_free_is_an_error():
     p = PagePool(num_pages=4)
     pid = p.alloc(tier=2)

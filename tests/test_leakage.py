@@ -1,0 +1,206 @@
+"""Access-pattern leakage: tier-scoped telemetry invariants (with the
+aggregation-off positive control), value-keyed noise determinism, the
+per-signal risk scorer, and a lean end-to-end prefix-membership attack
+through the real serving stack."""
+import pytest
+
+from _hypothesis_shim import given, settings, st
+
+from repro.core.islands import IslandRegistry, personal_island
+from repro.core.lighthouse import Lighthouse, TelemetryPolicy
+from repro.privacy.adversary import (AttackResult, AttackStack,
+                                     Mitigations, run_attack_suite)
+from repro.privacy.leakage import CHANNEL_WEIGHTS, advantage, leakage_report
+from repro.serving.kvpool import PagePool, prefix_chunk_hashes
+
+EXACT = TelemetryPolicy(noise=False, quantum_pages=1, quantum_tokens=1)
+
+
+def _mesh(policy=None, n=2):
+    reg = IslandRegistry()
+    for i in range(n):
+        iid = f"isl{i}"
+        reg.register(personal_island(iid), reg.attestation_token(iid))
+    return Lighthouse(reg, telemetry_policy=policy)
+
+
+def _stats(tiers, **extra):
+    """A synthetic report_pool payload with per-tier rows."""
+    base = {"in_use": sum(d.get("pages_in_use", 0) for d in tiers.values()),
+            "share_hits": 0, "prefill_backlog": 0, "work_clock": 123,
+            "tiers": {t: dict({"pages_in_use": 0, "share_hits": 0,
+                               "share_misses": 0, "prefill_backlog": 0,
+                               "work": 0}, **d) for t, d in tiers.items()}}
+    base.update(extra)
+    return base
+
+
+# ------------------------------------------------ tier-scoped lighthouse
+
+def test_scoped_view_hides_more_sensitive_tiers():
+    """A tier-3 viewer's aggregate must not move when tier-1 (more
+    sensitive) activity changes; a tier-1 viewer sees both tiers."""
+    lh_a = _mesh(EXACT)
+    lh_b = _mesh(EXACT)
+    lh_a.report_pool("isl0", _stats({1: {"pages_in_use": 9},
+                                     3: {"pages_in_use": 2}}))
+    lh_b.report_pool("isl0", _stats({1: {"pages_in_use": 40},
+                                     3: {"pages_in_use": 2}}))
+    assert lh_a.pool_telemetry(viewer_tier=3) == \
+        lh_b.pool_telemetry(viewer_tier=3)
+    assert lh_a.pool_telemetry(viewer_tier=1)["pages_in_use"] == 11
+    assert lh_b.pool_telemetry(viewer_tier=1)["pages_in_use"] == 42
+
+
+def test_scoped_view_omits_work_and_island_resolution():
+    """The scoped view never carries per-island keys or any work-clock
+    counter (cumulative work deltas re-expose per-request timing)."""
+    lh = _mesh(EXACT)
+    lh.report_pool("isl0", _stats({3: {"pages_in_use": 4, "work": 999}}))
+    view = lh.pool_telemetry(viewer_tier=3)
+    assert set(view) == {"viewer_tier", "pages_in_use", "share_hits",
+                         "share_misses", "prefill_backlog"}
+
+
+def test_scoped_backlog_excludes_hidden_tiers():
+    lh = _mesh(EXACT)
+    lh.report_pool("isl0", _stats({1: {"prefill_backlog": 96},
+                                   3: {"prefill_backlog": 32}},
+                                  prefill_backlog=128))
+    assert lh.mesh_prefill_backlog() == 128              # raw: everything
+    assert lh.mesh_prefill_backlog(viewer_tier=3) == 32  # scoped: own tier
+    assert lh.mesh_prefill_backlog(viewer_tier=1) == 128
+
+
+def test_tier_scoped_off_degrades_to_raw_view():
+    """The positive-control ablation: with aggregation disabled, scoped
+    calls return the raw per-island dicts."""
+    pol = TelemetryPolicy(tier_scoped=False)
+    lh = _mesh(pol)
+    lh.report_pool("isl0", _stats({1: {"pages_in_use": 5}}))
+    assert lh.pool_telemetry(viewer_tier=3) == lh.pool_telemetry()
+    assert "isl0" in lh.pool_telemetry(viewer_tier=3)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 50), st.integers(0, 50), st.integers(0, 30))
+def test_tier_aggregated_telemetry_is_exchangeable(a, b, backlog):
+    """The tentpole invariant: the scoped view is identical no matter
+    WHICH same-tier victim (island assignment) produced the pages —
+    swapping the two victims' loads across islands is unobservable.
+    Positive control: the raw per-island view exposes the swap."""
+    def mesh(x, y):
+        lh = _mesh()         # default policy: scoped + noised
+        lh.report_pool("isl0", _stats({1: {"pages_in_use": x,
+                                           "prefill_backlog": backlog}}))
+        lh.report_pool("isl1", _stats({1: {"pages_in_use": y}}))
+        return lh
+
+    lh1, lh2 = mesh(a, b), mesh(b, a)
+    assert lh1.pool_telemetry(viewer_tier=1) == \
+        lh2.pool_telemetry(viewer_tier=1)
+    assert lh1.mesh_prefill_backlog(viewer_tier=1) == \
+        lh2.mesh_prefill_backlog(viewer_tier=1)
+    if a != b:
+        assert lh1.pool_telemetry() != lh2.pool_telemetry()
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 6), st.integers(0, 6), st.booleans())
+def test_pool_tier_telemetry_exchangeable_across_victims(na, nb, swap):
+    """Pool-level flavor of the same invariant: per-tier counters cannot
+    attribute pages to a specific same-tier victim — allocation ORDER
+    (which victim went first) leaves tier_telemetry untouched."""
+    def drive(first, second):
+        p = PagePool(num_pages=16)
+        for _ in range(first):
+            p.alloc(tier=1)
+        for _ in range(second):
+            p.alloc(tier=1)
+        p.alloc(tier=3)          # the adversary's own page
+        return p.tier_telemetry()
+
+    assert drive(na, nb) == drive(nb, na)
+    if na + nb:
+        t = drive(na, nb) if not swap else drive(nb, na)
+        assert t[1]["pages_in_use"] == na + nb
+
+
+# --------------------------------------------------- value-keyed noising
+
+def test_value_keyed_noise_is_deterministic_and_bounded():
+    lh = _mesh()
+    r1 = lh._report_value("pages_in_use", 9, 4, 3)
+    r2 = lh._report_value("pages_in_use", 9, 4, 3)
+    assert r1 == r2                      # pure function of the state
+    assert 12 <= r1 < 16                 # round-up quantum + offset < q
+    # sub-quantum truth is destroyed: values in the same quantum report
+    # identically, so no sequence of observations separates them
+    assert lh._report_value("pages_in_use", 10, 4, 3) == r1
+    assert lh._report_value("pages_in_use", 12, 4, 3) == r1
+
+
+def test_noise_off_reports_quantized_truth():
+    lh = _mesh(TelemetryPolicy(noise=False))
+    assert lh._report_value("pages_in_use", 9, 4, 3) == 12
+    assert lh._report_value("pages_in_use", 0, 4, 3) == 0
+
+
+# ------------------------------------------------------------ the scorer
+
+def test_advantage_normalization():
+    assert advantage(1.0, 0.5) == 1.0
+    assert advantage(0.5, 0.5) == 0.0
+    assert advantage(0.3, 0.5) == 0.0        # below chance clamps to 0
+    assert advantage(0.625, 0.25) == 0.5
+
+
+def test_leakage_report_weights_and_lps():
+    res = {
+        "a": AttackResult(name="a", signal="hit_rate", n_classes=2,
+                          chance=0.5, accuracy=1.0, n_test=4),
+        "b": AttackResult(name="b", signal="backlog", n_classes=4,
+                          chance=0.25, accuracy=0.25, n_test=8),
+    }
+    rep = leakage_report(res)
+    by = {s["attack"]: s for s in rep["per_signal"]}
+    assert by["a"]["advantage"] == 1.0
+    assert by["a"]["risk"] == CHANNEL_WEIGHTS["hit_rate"]
+    assert by["b"]["advantage"] == 0.0
+    w = CHANNEL_WEIGHTS["hit_rate"] + CHANNEL_WEIGHTS["backlog"]
+    assert rep["lps"] == pytest.approx(CHANNEL_WEIGHTS["hit_rate"] / w)
+
+
+# ------------------------------------------------- end-to-end (reduced)
+
+@pytest.fixture(scope="module")
+def cfg():
+    from repro.configs.base import get_config
+    return get_config("smollm-135m").reduced()
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    import jax
+
+    from repro.models.model import get_model
+    return get_model(cfg).init(jax.random.PRNGKey(0), "float32")
+
+
+def test_mitigated_observation_exposes_no_island_or_work(cfg, params):
+    stack = AttackStack(cfg, params, Mitigations.on())
+    obs = stack.observe()
+    assert obs["per_island_pages"] == {} and obs["work"] == 0
+
+
+def test_prefix_membership_attack_blunted_by_mitigations(cfg, params):
+    """The benchmark gate in miniature: the share-hit channel separates
+    member from outsider with mitigations off, and collapses to exactly
+    chance once telemetry is tier-scoped (the full suite with all six
+    attacks runs in benchmarks/leakage.py)."""
+    off = run_attack_suite(cfg, params, Mitigations.off(),
+                           include={"prefix_membership"}, test_per_class=1)
+    on = run_attack_suite(cfg, params, Mitigations.on(),
+                          include={"prefix_membership"}, test_per_class=1)
+    assert off["prefix_membership"].accuracy >= 0.8
+    assert on["prefix_membership"].accuracy <= 0.5 + 0.05
