@@ -20,6 +20,12 @@ exact, not statistical:
   geometry change: token streams bit-exact vs the fused default on the
   tier-1 serving workload, deterministic work clock within 1.25x, and at
   most one distinct prefill and one distinct decode launch shape.
+* ``traced_le_chance_plus_slack`` / ``traced_equals_untraced`` — a third
+  suite runs the mitigated stack WITH the operator-side span tracer
+  attached (``repro.obs``): every attack must still sit at <= chance +
+  0.05, and — since the journal never feeds the adversary's observation
+  taps — every accuracy must equal the untraced mitigated run EXACTLY.
+  This is the "tracing adds no tenant-observable channel" gate.
 
 ``--json`` writes the ``BENCH_leakage.json`` artifact (per-signal
 accuracies, normalized risk scores, aggregate LPS for both runs). Failed
@@ -32,6 +38,7 @@ import json
 
 from repro.configs.base import get_config
 from repro.core.workload import tiered_serving_prompts
+from repro.obs import Tracer
 from repro.privacy.adversary import Mitigations, run_attack_suite
 from repro.privacy.leakage import leakage_report
 from repro.serving.batcher import make_batcher
@@ -93,10 +100,13 @@ def run(json_path=None):
     cfg = get_config("smollm-135m").reduced()
     params = LocalModelServer(cfg, max_len=160).params
 
+    tracer = Tracer()
     suites = {}
-    for label, mit in (("mitigations_off", Mitigations.off()),
-                       ("mitigations_on", Mitigations.on())):
-        results = run_attack_suite(cfg, params, mit)
+    for label, mit, tr in (
+            ("mitigations_off", Mitigations.off(), None),
+            ("mitigations_on", Mitigations.on(), None),
+            ("mitigations_on_traced", Mitigations.on(), tracer)):
+        results = run_attack_suite(cfg, params, mit, tracer=tr)
         report = leakage_report(results)
         suites[label] = {"report": report, "results": results}
         for sig in report["per_signal"]:
@@ -107,9 +117,12 @@ def run(json_path=None):
                           f" adv={sig['advantage']:.2f}"))
         lines.append((f"leak/{label}/LPS", 0.0,
                       f"lps={report['lps']:.3f}"))
+    lines.append(("leak/traced_span_events", 0.0,
+                  f"events={len(tracer.events)}"))
 
     off = suites["mitigations_off"]["results"]
     on = suites["mitigations_on"]["results"]
+    traced = suites["mitigations_on_traced"]["results"]
     shape_ab = constant_shape_ab(cfg, params, lines)
 
     checks = {
@@ -120,12 +133,25 @@ def run(json_path=None):
             for r in off.values()),
         "mitigated_le_chance_plus_slack": all(
             r.accuracy <= r.chance + SLACK for r in on.values()),
+        # tracing must neither open a channel (still under the slack
+        # line) nor perturb the deterministic game AT ALL (accuracies
+        # exactly equal, attack by attack)
+        "traced_le_chance_plus_slack": all(
+            r.accuracy <= r.chance + SLACK for r in traced.values()),
+        "traced_equals_untraced":
+            sorted(traced) == sorted(on) and all(
+                traced[k].accuracy == on[k].accuracy for k in on),
+        # the traced suite actually journaled the stacks it attacked
+        "traced_span_events_nonzero": len(tracer.events) > 0,
         **{f"shape/{k}": ok for k, ok in shape_ab["checks"].items()},
     }
 
     artifact = {
         "mitigations_off": suites["mitigations_off"]["report"],
         "mitigations_on": suites["mitigations_on"]["report"],
+        "mitigations_on_traced":
+            suites["mitigations_on_traced"]["report"],
+        "traced_span_events": len(tracer.events),
         "constant_shape": {k: v for k, v in shape_ab.items()
                            if k != "checks"},
         "slack": SLACK,

@@ -1,7 +1,7 @@
 """Benchmark harness entrypoint: ``PYTHONPATH=src python -m benchmarks.run``.
 
-One module per paper table/claim (see DESIGN.md §6 per-experiment index).
-Prints ``name,us_per_call,derived`` CSV rows.
+One module per paper table/claim (see the experiment index in
+docs/architecture.md). Prints ``name,us_per_call,derived`` CSV rows.
 """
 from __future__ import annotations
 
@@ -10,8 +10,8 @@ import time
 
 
 def main() -> None:
-    from benchmarks import (feature_matrix, kernels_micro, micro, roofline,
-                            routing_policies, serving)
+    from benchmarks import (feature_matrix, kernels_micro, leakage, micro,
+                            roofline, routing_policies, serving)
     t0 = time.time()
     print("name,us_per_call,derived")
     modules = [
@@ -19,6 +19,7 @@ def main() -> None:
         ("routing_policies", routing_policies.run),
         ("micro", micro.run),
         ("serving", serving.run),
+        ("leakage", leakage.run),
         ("kernels_micro", kernels_micro.run),
         ("roofline", roofline.run),
     ]

@@ -27,6 +27,17 @@ that CI uploads. Artifact schema highlights:
   path's per-tick device-dispatch peak <= 3 (wall time on shared runners
   is noisy, so the LAUNCH COUNT is the gated wall-clock proxy). Failed
   checks exit nonzero — that is the CI gate.
+* per-mode ``profiler`` — the dispatch profiler's host-plan vs
+  device-execute phase breakdown (plan build, bucket lookup, dispatch
+  submit, ``block_until_ready`` tail) plus dispatch-shape/recompile
+  counters, measured on a third, profiled pass so the timed ``req_s``
+  pass stays unperturbed. Wall-time phases are recorded, never gated.
+* ``tracing`` — the span-tracer zero-interference gate: tracing +
+  profiling on vs off must leave greedy streams bit-exact and the work
+  clock equal; per-request span work must sum to each batcher's work
+  clock (span conservation); and under the PR-5 churn scenario (drain +
+  kill) every request must get exactly one terminal span. ``--trace``
+  additionally writes the churn leg's Chrome-trace/Perfetto JSON.
 """
 from __future__ import annotations
 
@@ -39,6 +50,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import get_config
 from repro.launch.serve import build_mesh
+from repro.obs import DispatchProfiler, Tracer, write_chrome_trace
+from repro.obs.metrics import ttft_stats
 from repro.serving.batcher import make_batcher
 from repro.serving.engine import (InferenceEngine, LocalModelServer,
                                   TickOrchestrator)
@@ -48,7 +61,7 @@ from repro.core.workload import (LONG_PROMPT_CHARS, SHARED_HEAD_TOKENS,
                                  tiered_serving_prompts)
 
 
-def run(cache_modes=("stacked", "paged"), json_path=None):
+def run(cache_modes=("stacked", "paged"), json_path=None, trace_path=None):
     lines = []
     artifact = {"cache_modes": {}, "shared_prefix": {}}
     cfg = get_config("smollm-135m").reduced()
@@ -124,6 +137,8 @@ def run(cache_modes=("stacked", "paged"), json_path=None):
         artifact["churn"] = churn_ab(cfg, lines, params=srv.params)
         artifact["fused_tick"] = fused_tick_ab(cfg, lines,
                                                params=srv.params)
+        artifact["tracing"] = tracing_ab(cfg, lines, params=srv.params,
+                                         trace_path=trace_path)
         # req/s comparison is wall-clock on shared runners (noisy), so it
         # is recorded but only the deterministic privacy/memory/TTFT
         # checks below gate the run
@@ -145,6 +160,8 @@ def run(cache_modes=("stacked", "paged"), json_path=None):
         "churn", {}).get("checks", {}).items()})
     checks.update({f"fused/{k}": ok for k, ok in artifact.get(
         "fused_tick", {}).get("checks", {}).items()})
+    checks.update({f"tracing/{k}": ok for k, ok in artifact.get(
+        "tracing", {}).get("checks", {}).items()})
     global _FAILED_CHECKS
     _FAILED_CHECKS = [k for k, ok in checks.items() if not ok]
     for k in _FAILED_CHECKS:
@@ -153,15 +170,10 @@ def run(cache_modes=("stacked", "paged"), json_path=None):
 
 
 def _ttft_stats(batcher, rids=None):
-    """p50 ticks/work to first token from the batcher's request log."""
-    recs = [r for rid, r in batcher.request_log.items()
-            if (rids is None or rid in rids) and "ttft_work" in r]
-    if not recs:
-        return {}
-    ticks = sorted(r["ttft_ticks"] for r in recs)
-    work = sorted(r["ttft_work"] for r in recs)
-    return {"ttft_ticks_p50": ticks[len(ticks) // 2],
-            "ttft_work_p50": work[len(work) // 2]}
+    """p50 ticks/work to first token — the shared ``obs.metrics``
+    implementation (bit-identical to the sort-and-index this helper used
+    to inline)."""
+    return ttft_stats(batcher.request_log, rids)
 
 
 def _phase_stats(batcher):
@@ -235,13 +247,24 @@ def routed_throughput(cfg, n_requests=16, max_new=8, slots=8,
     n_local_bat = sum(1 for r in orch.log[warm_len_b:]
                       if r.island_id == "laptop")
 
+    # third, PROFILED pass: per-tick host-plan vs device-execute phase
+    # breakdown (shapes are warm, so recompiles don't pollute it; it runs
+    # after the timed pass so req_s stays probe-free)
+    prof = DispatchProfiler()
+    bat.profiler = prof
+    for req, _ in wl:
+        orch.submit(req, max_new_tokens=max_new)
+    orch.run_until_done()
+    bat.profiler = None
+
     rps_seq = baseline["rps_seq"]
     rps_bat = max(done_bat, 1) / dt_bat
     pool_note = ""
     stats = {"req_s": round(rps_bat, 2), "decode_tok_s": round(
         toks / dt_bat, 1), "speedup_vs_per_request": round(
         rps_bat / rps_seq, 2), "completed": done_bat,
-        "phase": _phase_stats(bat), **_ttft_stats(bat)}
+        "phase": _phase_stats(bat), "profiler": prof.report(),
+        **_ttft_stats(bat)}
     if cache == "paged":
         t = bat.pool.telemetry()
         pool_note = (f" pages_peak={t['peak_in_use']}"
@@ -595,15 +618,160 @@ def churn_ab(cfg, lines, params=None, n_requests=10, max_new=8):
     return out
 
 
+def tracing_ab(cfg, lines, params=None, n_requests=12, max_new=6, slots=6,
+               trace_path=None):
+    """Span-tracer zero-interference + accounting gate.
+
+    Leg 1 (standalone fused paged batcher): the identical workload with
+    tracing + profiling OFF vs ON must produce bit-exact greedy streams
+    and an equal deterministic work clock — emission is a list append,
+    never a device sync — and the traced leg's per-request span work must
+    sum to the batcher's work clock exactly (span conservation), with
+    exactly one ``first_token`` event per request.
+
+    Leg 2 (PR-5 churn: 3-island mesh, drain at tick 2, kill at tick 5,
+    tracer on the orchestrator): every submitted request must get exactly
+    one terminal span (``complete``/``reject``) despite freeze/thaw/
+    migration/failover, and span conservation must hold per island —
+    including the drained and killed islands, whose journals stop where
+    their work clocks froze. ``trace_path`` writes this leg's journal as
+    Chrome-trace/Perfetto JSON."""
+    from repro.core.islands import IslandRegistry, personal_island
+    from repro.core.lighthouse import Lighthouse
+    from repro.core.mist import MIST
+    from repro.core.tide import TIDE
+    from repro.core.waves import WAVES, Policy, Request
+    from repro.serving.engine import TickOrchestrator, build_island_batchers
+
+    prompts = tiered_serving_prompts(n_requests, seed=7)
+
+    def drive(traced):
+        b = make_batcher(cfg, cache="paged", num_slots=slots, max_len=96,
+                         params=params, fused=True)
+        tr = None
+        if traced:
+            tr = Tracer()
+            b.attach_tracer(tr, island="laptop")
+            b.profiler = DispatchProfiler()
+        rids = [b.submit(p, max_new_tokens=max_new, trust_tier=t)
+                for p, t in prompts]
+        t0 = time.perf_counter()
+        done = b.run_until_done()
+        dt = time.perf_counter() - t0
+        out = {"streams": [done[r] for r in rids],
+               "work_clock": b.work_clock, "ticks": b.stats["ticks"],
+               "req_s": round(len(done) / max(dt, 1e-9), 2)}
+        if traced:
+            prof = b.profiler.report()
+            out.update(
+                events=len(tr.events),
+                conservation=tr.conservation_ok({"laptop": b}),
+                first_token_once=all(
+                    v == 1 for v in tr.first_token_counts().values()),
+                profiler=prof)
+        return out
+
+    off = drive(False)
+    on = drive(True)
+
+    def churn_traced():
+        reg = IslandRegistry()
+        for isl in [personal_island("laptop", latency_ms=120,
+                                    capacity_units=2.0),
+                    personal_island("desktop", latency_ms=150,
+                                    capacity_units=2.0),
+                    personal_island("nas", latency_ms=200,
+                                    capacity_units=2.0)]:
+            reg.register(isl, reg.attestation_token(isl.island_id))
+        mist, tide, lh = MIST(), TIDE(reg), Lighthouse(reg)
+        for i in reg.all():
+            lh.heartbeat(i.island_id)
+        waves = WAVES(mist, tide, lh, Policy())
+        bats = build_island_batchers(cfg, reg, cache="paged", max_len=96,
+                                     slots_per_capacity_unit=2.0,
+                                     params=params)
+        all_bats = dict(bats)          # failure pops entries from `bats`
+        tracer = Tracer()
+        orch = TickOrchestrator(waves, reg, bats, decode_ticks_per_tick=1,
+                                migration_token_budget=256, tracer=tracer)
+        rids = [orch.submit(Request(query=q, priority="primary",
+                                    sensitivity_override=s),
+                            max_new_tokens=max_new)
+                for q, s in churn_prompts(10)]
+        ev = {2: lambda o: o.drain_island("laptop"),
+              5: lambda o: o.fail_island("desktop")}
+        k = 0
+        while orch.busy() and orch.tick_stats["ticks"] < 500:
+            orch.tick()
+            k += 1
+            if k in ev:
+                ev.pop(k)(orch)
+        cons = tracer.conservation_ok(all_bats)
+        written = 0
+        if trace_path:
+            written = write_chrome_trace(tracer, trace_path)
+            lines.append(("serve/trace_artifact", 0.0,
+                          f"{trace_path} events={written}"))
+        return {
+            "events": len(tracer.events),
+            "terminals_exactly_once": tracer.terminals_exactly_once(rids),
+            "conservation": cons,
+            "migrations": orch.tick_stats["migrations"],
+            "failovers": orch.tick_stats["failovers"],
+            "trace_events_written": written,
+        }
+
+    churn = churn_traced()
+    prof = on["profiler"]
+    out = {
+        "off": {k: v for k, v in off.items() if k != "streams"},
+        "on": {k: v for k, v in on.items()
+               if k not in ("streams", "profiler")},
+        "profiler": prof,
+        "churn": churn,
+        "checks": {
+            "bitexact_streams": on["streams"] == off["streams"],
+            "work_clock_equal": on["work_clock"] == off["work_clock"],
+            "span_conservation": on["conservation"]["all"],
+            "first_token_exactly_once": on["first_token_once"],
+            "profiler_phases_present": all(
+                f"{p}_ms" in prof for p in
+                ("host_plan", "bucket", "dispatch_submit", "device_sync")),
+            "churn_terminals_exactly_once":
+                churn["terminals_exactly_once"],
+            "churn_span_conservation": churn["conservation"]["all"],
+        },
+    }
+    lines.append(("serve/tracing_off", 0.0,
+                  f"work={off['work_clock']} ticks={off['ticks']}"
+                  f" {off['req_s']} req/s"))
+    lines.append(("serve/tracing_on", 0.0,
+                  f"work={on['work_clock']} ticks={on['ticks']}"
+                  f" events={on['events']}"
+                  f" bitexact={out['checks']['bitexact_streams']}"
+                  f" {on['req_s']} req/s"))
+    lines.append(("serve/tracing_churn", 0.0,
+                  f"events={churn['events']}"
+                  f" terminals_once={churn['terminals_exactly_once']}"
+                  f" conservation={churn['conservation']['all']}"
+                  f" migrations={churn['migrations']}"
+                  f" failovers={churn['failovers']}"))
+    return out
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--cache", choices=("stacked", "paged", "both"),
                     default="both")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write the BENCH_serving.json artifact here")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write the churn leg's Chrome-trace/Perfetto "
+                         "JSON here (load at ui.perfetto.dev)")
     args = ap.parse_args()
     modes = ("stacked", "paged") if args.cache == "both" else (args.cache,)
-    for row in run(cache_modes=modes, json_path=args.json):
+    for row in run(cache_modes=modes, json_path=args.json,
+                   trace_path=args.trace):
         print(row)
     if _FAILED_CHECKS:
         raise SystemExit(

@@ -4,7 +4,13 @@ trust-tiered paged KV cache on the SHORE islands, MIST sanitization across
 trust boundaries, and real decoded tokens back for every request.
 
     PYTHONPATH=src python examples/quickstart.py
+
+Pass ``--trace out.json`` to journal every request span (submit, route,
+prefill chunks, first token, decode, completion) and write it as
+Chrome-trace/Perfetto JSON — open at ui.perfetto.dev to see islands as
+processes and decode slots as tracks.
 """
+import argparse
 import sys
 from pathlib import Path
 
@@ -21,6 +27,11 @@ from repro.serving.engine import TickOrchestrator, build_island_batchers
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write the request-span journal as Chrome-trace/"
+                         "Perfetto JSON")
+    args = ap.parse_args()
     # 1. Register islands (attestation required — Attack-2 mitigation)
     reg = IslandRegistry()
     for isl in [
@@ -44,7 +55,11 @@ def main():
     cfg = get_config("smollm-135m").reduced()
     print("building per-island paged batchers...")
     batchers = build_island_batchers(cfg, reg, cache="paged", max_len=96)
-    orch = TickOrchestrator(waves, reg, batchers)
+    tracer = None
+    if args.trace:
+        from repro.obs import Tracer
+        tracer = Tracer()
+    orch = TickOrchestrator(waves, reg, batchers, tracer=tracer)
 
     # 4. Submit the paper's motivating examples CONCURRENTLY; every tick
     #    routes the whole pending pool in one kernel call and advances all
@@ -78,6 +93,13 @@ def main():
         print(f"  {iid:10s} pages={t['in_use']}/{t['num_pages']} "
               f"peak={t['peak_in_use']} share_hit_rate={t['share_hit_rate']}"
               f" cow={t['cow_copies']}")
+
+    # 6. Optional: dump the span journal for Perfetto
+    if tracer is not None:
+        from repro.obs import write_chrome_trace
+        n = write_chrome_trace(tracer, args.trace)
+        print(f"\nwrote {n} trace events to {args.trace} "
+              f"(load at ui.perfetto.dev)")
 
 
 if __name__ == "__main__":

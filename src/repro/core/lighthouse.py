@@ -44,6 +44,27 @@ class TelemetryPolicy:
     seed: int = 0
 
 
+def harden_value(policy: TelemetryPolicy, metric: str, value: int,
+                 quantum: int, viewer_tier: int) -> int:
+    """Harden one scalar for a scoped viewer: round UP to the policy
+    quantum (occupancy is never understated), then add a deterministic
+    offset in [0, quantum) keyed by (seed, metric, viewer, quantized
+    value). Same true state => same report, so deterministic CI can
+    still gate on it — but the offset carries no information about the
+    sub-quantum truth and cannot be averaged out across observations.
+
+    Module-level so every tenant-facing surface (lighthouse scoped
+    views, the span tracer's ``tenant_summary``) hardens through the
+    SAME transform."""
+    q = max(1, int(quantum))
+    v = (int(value) + q - 1) // q * q
+    if policy.noise and q > 1:
+        h = hashlib.sha256(
+            f"{policy.seed}:{metric}:{viewer_tier}:{v}".encode()).digest()
+        v += int.from_bytes(h[:4], "little") % q
+    return v
+
+
 class Lighthouse:
     def __init__(self, registry, heartbeat_timeout_s: float = 5.0,
                  telemetry_policy: TelemetryPolicy | None = None):
@@ -99,20 +120,8 @@ class Lighthouse:
 
     def _report_value(self, metric: str, value: int, quantum: int,
                       viewer_tier: int) -> int:
-        """Harden one scalar for a scoped viewer: round UP to the policy
-        quantum (occupancy is never understated), then add a deterministic
-        offset in [0, quantum) keyed by (seed, metric, viewer, quantized
-        value). Same true state => same report, so deterministic CI can
-        still gate on it — but the offset carries no information about the
-        sub-quantum truth and cannot be averaged out across observations."""
-        pol = self.telemetry_policy
-        q = max(1, int(quantum))
-        v = (int(value) + q - 1) // q * q
-        if pol.noise and q > 1:
-            h = hashlib.sha256(
-                f"{pol.seed}:{metric}:{viewer_tier}:{v}".encode()).digest()
-            v += int.from_bytes(h[:4], "little") % q
-        return v
+        return harden_value(self.telemetry_policy, metric, value,
+                            quantum, viewer_tier)
 
     def mesh_prefill_backlog(self, viewer_tier: int | None = None) -> int:
         """Total undispatched prefill tokens across reporting islands.

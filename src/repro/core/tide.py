@@ -135,6 +135,21 @@ class TIDE:
         st.ewma_slope = (1 - a) * st.ewma_slope + a * (st.ewma_r - prev)
         return r
 
+    def peek_capacity(self, island_id: str) -> float:
+        """``capacity`` WITHOUT the EWMA update — a pure read for
+        observers (the span tracer's per-tick capacity snapshot).
+        ``capacity`` itself mutates exhaustion-prediction state, so an
+        observer calling it would perturb routing; this never may."""
+        if self.crashed or not self._active(island_id):
+            return 0.0
+        island = self.registry.get(island_id)
+        if island.unbounded:
+            return 1.0
+        st = self.state.get(island_id)
+        if st is None:
+            return 1.0 - max(0.05, 0.0, 0.10)   # LoadState() baseline
+        return 1.0 - max(st.cpu, st.gpu, st.mem)
+
     def threshold(self, priority: str = "secondary") -> float:
         """Minimum capacity to accept a request locally. The Sec IX-B tier
         gates (primary 0 / secondary 0.50 / burstable 0.80) are the floors at

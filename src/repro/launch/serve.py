@@ -9,6 +9,12 @@ privacy accounting and latency percentiles.
 batched orchestrator: the whole pending pool is routed per scheduling tick
 through the capacity-aware ``route_batch_tick`` kernel and SHORE work runs
 through per-island continuous batchers.
+
+``--trace out.json`` (implies ``--batched``) attaches the operator-side
+span tracer (``repro.obs``) to the run and writes the request-span
+journal as Chrome-trace/Perfetto JSON — islands as processes, decode
+slots as tracks, migrations as flow arrows. Load it at ui.perfetto.dev
+or chrome://tracing.
 """
 from __future__ import annotations
 
@@ -79,7 +85,14 @@ def main(argv=None):
                          "full-prompt dispatch (--batched only)")
     ap.add_argument("--train-classifier", action="store_true",
                     help="train the MIST stage-2 JAX classifier first")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write the request-span journal as Chrome-trace/"
+                         "Perfetto JSON (implies --batched; operator-view "
+                         "only)")
     args = ap.parse_args(argv)
+    if args.trace and not args.batched:
+        print("--trace implies --batched: enabling the tick orchestrator")
+        args.batched = True
 
     clf = None
     if args.train_classifier:
@@ -91,15 +104,20 @@ def main(argv=None):
     reg, waves = build_mesh(Policy(mode=args.mode), args.buffer, clf)
     cfg = get_config(args.arch).reduced()
     wl = healthcare_workload(args.requests, seed=args.seed)
+    tracer = None
     if args.batched:
         from repro.serving.batcher import make_batcher
         from repro.serving.engine import TickOrchestrator
+        if args.trace:
+            from repro.obs import Tracer
+            tracer = Tracer()
         batchers = {iid: make_batcher(cfg, cache=args.cache,
                                       num_slots=args.slots,
                                       prefill=args.prefill,
                                       max_len=128, seed=args.seed)
                     for iid in ("laptop", "home-nas")}
-        eng = TickOrchestrator(waves, reg, batchers, seed=args.seed)
+        eng = TickOrchestrator(waves, reg, batchers, seed=args.seed,
+                               tracer=tracer)
     else:
         servers = {"laptop": LocalModelServer(cfg, max_len=128,
                                               seed=args.seed),
@@ -111,6 +129,11 @@ def main(argv=None):
     if args.batched:
         eng.run_until_done()
     print(json.dumps(eng.stats(), indent=1))
+    if tracer is not None:
+        from repro.obs import write_chrome_trace
+        n = write_chrome_trace(tracer, args.trace)
+        print(f"wrote {n} trace events to {args.trace} "
+              f"(load at ui.perfetto.dev)")
     return eng
 
 

@@ -91,7 +91,7 @@ class AttackStack:
 
     def __init__(self, cfg, params, mitigations: Mitigations,
                  islands=(("local", None),), max_len=160,
-                 prefill_token_budget=None, seed=0):
+                 prefill_token_budget=None, seed=0, tracer=None):
         self.mitigations = mitigations
         reg = IslandRegistry()
         for n, (iid, model) in enumerate(islands):
@@ -113,8 +113,12 @@ class AttackStack:
             prefill_token_budget=prefill_token_budget,
             constant_shape=mitigations.constant_shape)
         self.batchers = bats
+        # operator-side span tracer; the adversary NEVER reads it (its
+        # taps stay `observe()`/`max_dispatch_shape`), so the leakage
+        # benchmark can gate "attack accuracies identical traced vs not"
         self.orch = TickOrchestrator(waves, reg, bats,
-                                     decode_ticks_per_tick=1)
+                                     decode_ticks_per_tick=1,
+                                     tracer=tracer)
         self._trial = 0
 
     # ----------------------------------------------------- observation
@@ -256,9 +260,13 @@ def _victim_prompt(trial: int, chars: int) -> str:
 
 def run_attack_suite(cfg, params, mitigations: Mitigations,
                      include=None, cal_per_class=1,
-                     test_per_class=2) -> dict:
+                     test_per_class=2, tracer=None) -> dict:
     """Run every attack (or the ``include`` subset) against a stack built
-    with ``mitigations``; returns {attack_name: AttackResult}."""
+    with ``mitigations``; returns {attack_name: AttackResult}.
+
+    ``tracer`` attaches an operator-side span tracer to every stack the
+    suite builds (the tracing-enabled leakage leg): it must change NO
+    accuracy, since the journal never feeds the adversary's features."""
     results: dict[str, AttackResult] = {}
 
     def sel(name):
@@ -273,7 +281,7 @@ def run_attack_suite(cfg, params, mitigations: Mitigations,
     # A's 64-token prompt head? The adversary watches the mesh share-hit
     # counter move while both drain.
     if sel("prefix_membership"):
-        stack = AttackStack(cfg, params, mitigations)
+        stack = AttackStack(cfg, params, mitigations, tracer=tracer)
         head, _prompts = shared_head_prompts(1)
         writer = head + " alpha"
         member = head + " beta"
@@ -297,7 +305,7 @@ def run_attack_suite(cfg, params, mitigations: Mitigations,
     # the only timing signal is the published work counter.
     if sel("victim_length_pages") or sel("victim_length_work"):
         stack = AttackStack(cfg, params, mitigations,
-                            prefill_token_budget=256)
+                            prefill_token_budget=256, tracer=tracer)
         chars = (15, 31, 63, 127)        # 1 / 2 / 4 / 8 KV pages
 
         def trial(c):
@@ -322,7 +330,7 @@ def run_attack_suite(cfg, params, mitigations: Mitigations,
     # several ticks. No probe — the channel is pure telemetry.
     if sel("victim_length_backlog"):
         stack = AttackStack(cfg, params, mitigations,
-                            prefill_token_budget=32)
+                            prefill_token_budget=32, tracer=tracer)
         chars = (31, 63, 95, 127)        # 32 / 64 / 96 / 128 tokens
 
         def trial(c):
@@ -346,6 +354,8 @@ def run_attack_suite(cfg, params, mitigations: Mitigations,
                 cfg, cache="paged", num_slots=4, max_len=160,
                 params=params, prefill_token_budget=32,
                 constant_shape=mitigations.constant_shape)
+            if tracer is not None:
+                b.attach_tracer(tracer, island="shape-island")
             b.submit(_victim_prompt(trial.n, shape_classes[c]),
                      max_new_tokens=4, trust_tier=1)
             b.submit(f"adv probe {trial.n:03d}", max_new_tokens=3,
@@ -371,7 +381,8 @@ def run_attack_suite(cfg, params, mitigations: Mitigations,
     if sel("island_routing"):
         stack = AttackStack(cfg, params, mitigations,
                             islands=(("island-a", "model-a"),
-                                     ("island-b", "model-b")))
+                                     ("island-b", "model-b")),
+                            tracer=tracer)
 
         def trial(bit):
             return stack.run_trial(

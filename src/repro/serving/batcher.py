@@ -171,6 +171,28 @@ class _BatcherBase:
         self.tier_work: dict = {}
         # rid -> lifecycle record (submit/admit/first-token ticks & work)
         self.request_log: dict[int, dict] = {}
+        # observability (opt-in, zero-interference): a Tracer receives
+        # span events stamped on this batcher's tick/work clocks, a
+        # DispatchProfiler times tick phases. Both default off; neither
+        # may touch scheduling state (see src/repro/obs/).
+        self.tracer = None
+        self.island = ""
+        self.profiler = None
+
+    def attach_tracer(self, tracer, island: str = ""):
+        """Attach a span tracer; ``island`` labels this batcher's events.
+        Paged mode also wires the page pool's event hook."""
+        self.tracer = tracer
+        self.island = island
+        pool = getattr(self, "pool", None)
+        if pool is not None and tracer is not None:
+            pool.trace_hook = self._trace
+
+    def _trace(self, kind, rid=None, **attrs):
+        if self.tracer is not None:
+            self.tracer.emit(kind, island=self.island, rid=rid,
+                             tick=self.stats["ticks"],
+                             work=self.work_clock, **attrs)
 
     # --------------------------------------------------------- submission
     def submit(self, prompt: str, max_new_tokens=16,
@@ -186,6 +208,9 @@ class _BatcherBase:
         self.request_log[rid] = {"submit_tick": self.stats["ticks"],
                                  "submit_work": self.work_clock,
                                  "tokens_skipped": 0}
+        if self.tracer is not None:
+            self._trace("queue", rid=rid, tier=trust_tier,
+                        max_new=max_new_tokens)
         return rid
 
     def submit_ticket(self, ticket: MigrationTicket) -> int:
@@ -216,6 +241,10 @@ class _BatcherBase:
         rec["submit_work"] = self.work_clock
         rec["migrations"] = rec.get("migrations", 0) + 1
         self.request_log[rid] = rec
+        if self.tracer is not None:
+            self._trace("thaw_queue", rid=rid, tier=ticket.tier,
+                        phase=ticket.phase,
+                        kv_tokens=ticket.kv_tokens)
         return rid
 
     # ----------------------------------------------------------- migration
@@ -231,6 +260,8 @@ class _BatcherBase:
             self.queue.pop(i)
             getattr(self, "_enc_len", {}).pop(rid, None)
             t = self._tickets.pop(rid, None)
+            if self.tracer is not None:
+                self._trace("freeze", rid=rid, phase="queued")
             if t is not None:
                 return t            # still a ticket: forward untouched
             return MigrationTicket(
@@ -259,24 +290,36 @@ class _BatcherBase:
                     log=self.request_log.get(s.request_id))
 
     # ------------------------------------------------------ lifecycle notes
-    def _note_admission(self, rid, prompt_tokens):
+    def _note_admission(self, rid, prompt_tokens, slot=None):
         self.stats["admissions"] += 1
         rec = self.request_log.get(rid)
         if rec is not None:
             rec["admit_tick"] = self.stats["ticks"]
             rec["prompt_tokens"] = prompt_tokens
+        if self.tracer is not None:
+            self._trace("admit", rid=rid, slot=slot,
+                        prompt_tokens=prompt_tokens)
 
-    def _note_prefill_dispatch(self, tokens, tier=None):
+    def _note_prefill_dispatch(self, tokens, tier=None, rid=None,
+                               slot=None):
         self.stats["prefills"] += 1
         self.stats["prefill_dispatches"] += 1
         self.work_clock += tokens
         self.tier_work[tier] = self.tier_work.get(tier, 0) + tokens
+        if self.tracer is not None:
+            self._trace("prefill", rid=rid, slot=slot, tokens=tokens,
+                        tier=tier)
 
     def _note_decode_work(self, slot_indices):
         self.work_clock += len(slot_indices)
         for si in slot_indices:
             t = self.slots[si].tier
             self.tier_work[t] = self.tier_work.get(t, 0) + 1
+        if self.tracer is not None:
+            self._trace("decode",
+                        rids=[self.slots[si].request_id
+                              for si in slot_indices],
+                        slots=list(slot_indices))
 
     def _note_first_token(self, rid):
         rec = self.request_log.get(rid)
@@ -284,6 +327,23 @@ class _BatcherBase:
             rec["first_token_tick"] = self.stats["ticks"]
             rec["ttft_ticks"] = rec["first_token_tick"] - rec["submit_tick"]
             rec["ttft_work"] = self.work_clock - rec["submit_work"]
+        if self.tracer is not None:
+            self._trace("first_token", rid=rid)
+
+    def _note_terminal(self, rid, outcome, tokens=0, tier=None):
+        """Stamp a request's terminal record: ``outcome`` is "completed"
+        or "rejected" (executor-level: could never fit). Exactly one
+        terminal note per batcher-local rid."""
+        rec = self.request_log.get(rid)
+        if rec is not None:
+            rec["done_tick"] = self.stats["ticks"]
+            rec["done_work"] = self.work_clock
+            rec["outcome"] = outcome
+            rec["generated_tokens"] = tokens
+        if self.tracer is not None:
+            self._trace("finish" if outcome == "completed"
+                        else "exec_reject", rid=rid, tokens=tokens,
+                        tier=tier)
 
     def busy(self) -> bool:
         return bool(self.queue) or any(s.active for s in self.slots)
@@ -293,7 +353,17 @@ class _BatcherBase:
         number of model dispatches any single tick issued — the
         deterministic wall-clock proxy the serving benchmark gates on."""
         d0 = self.stats["device_dispatches"]
-        self._tick_inner()
+        prof = self.profiler
+        if prof is None:
+            self._tick_inner()
+        else:
+            shapes = getattr(self, "dispatch_shapes", None)
+            k0 = len(shapes) if shapes is not None else 0
+            prof.tick_begin()
+            self._tick_inner()
+            prof.tick_end(self._profile_sync_target())
+            if shapes is not None:
+                prof.note_shapes(shapes[k0:])
         self.stats["tick_dispatches_max"] = max(
             self.stats["tick_dispatches_max"],
             self.stats["device_dispatches"] - d0)
@@ -336,10 +406,16 @@ class _BatcherBase:
         s = self.slots[si]
         self.finished[s.request_id] = self.tok.decode(
             list(s.carried) + list(s.generated))
-        rec = self.request_log.get(s.request_id)
-        if rec is not None:
-            rec["done_tick"] = self.stats["ticks"]
+        self._note_terminal(s.request_id, "completed",
+                            tokens=len(s.carried) + len(s.generated),
+                            tier=s.tier)
         self.slots[si] = SlotState()
+
+    def _profile_sync_target(self):
+        """Device values the profiler blocks on at tick end, so in-flight
+        work is charged to the tick that launched it. Overridden per
+        cache manager; profiling-only — never called without a profiler."""
+        return None
 
 
 def _write_slot(stacked, one, si):
@@ -385,12 +461,19 @@ class ContinuousBatcher(_BatcherBase):
             if len(ids) + max_new - len(carried) - len(pending) \
                     >= self.max_len:
                 self.finished[rid] = None       # resumed context outgrew us
+                self._note_terminal(rid, "rejected", tier=tier)
                 continue
             toks = jnp.asarray(np.asarray(ids, np.int32)[None])
             cache = self.model.init_cache(1, self.max_len,
                                           dtype=jnp.bfloat16)
-            logits, cache = self._prefill(self.params, cache,
-                                          {"tokens": toks})
+            if self.profiler is not None:
+                with self.profiler.phase("dispatch_submit"):
+                    logits, cache = self._prefill(self.params, cache,
+                                                  {"tokens": toks})
+                self.profiler.add_ns("dispatch_submit", 0, dispatches=1)
+            else:
+                logits, cache = self._prefill(self.params, cache,
+                                              {"tokens": toks})
             self.stats["device_dispatches"] += 1
             self._cache = self._write(self._cache, cache, jnp.int32(si))
             sk = (ticket.sample_key if ticket is not None
@@ -405,10 +488,13 @@ class ContinuousBatcher(_BatcherBase):
                                        sample_key=sk)
             if ticket is not None and ticket.resumes_compute():
                 self.migration_stats["recomputes"] += 1
-            self._note_admission(rid, len(ids))
-            self._note_prefill_dispatch(len(ids), tier)
+            self._note_admission(rid, len(ids), slot=si)
+            self._note_prefill_dispatch(len(ids), tier, rid=rid, slot=si)
             if not pending:
                 self._note_first_token(rid)
+
+    def _profile_sync_target(self):
+        return self._cache
 
     # ----------------------------------------------------------- migration
     def _freeze_slot(self, si) -> MigrationTicket:
@@ -420,6 +506,9 @@ class ContinuousBatcher(_BatcherBase):
         t = MigrationTicket(**self._resume_fields(s), kv_tokens=s.pos,
                             dense=dense, max_len=self.max_len,
                             phase="decode")
+        if self.tracer is not None:
+            self._trace("freeze", rid=s.request_id, slot=si,
+                        phase="decode", kv_tokens=s.pos)
         self.slots[si] = SlotState()
         return t
 
@@ -449,7 +538,7 @@ class ContinuousBatcher(_BatcherBase):
                                    prompt=t.prompt, prompt_ids=context,
                                    sample_key=sk)
         self.migration_stats["imports"] += 1
-        self._note_admission(rid, len(context))
+        self._note_admission(rid, len(context), slot=si)
         return True
 
     # --------------------------------------------------------------- tick
@@ -466,8 +555,16 @@ class ContinuousBatcher(_BatcherBase):
             s = self.slots[si]
             toks[si, 0, 0] = s.generated[-1]
             poss[si] = s.pos
-        logits, self._cache = self._decode_all(
-            self.params, self._cache, jnp.asarray(toks), jnp.asarray(poss))
+        if self.profiler is not None:
+            with self.profiler.phase("dispatch_submit"):
+                logits, self._cache = self._decode_all(
+                    self.params, self._cache, jnp.asarray(toks),
+                    jnp.asarray(poss))
+            self.profiler.add_ns("dispatch_submit", 0, dispatches=1)
+        else:
+            logits, self._cache = self._decode_all(
+                self.params, self._cache, jnp.asarray(toks),
+                jnp.asarray(poss))
         self.stats["device_dispatches"] += 1
         nxt = self._sample_ready(logits[:, 0, :], active)
         self.stats["decode_steps"] += 1
@@ -601,6 +698,12 @@ class PagedContinuousBatcher(_BatcherBase):
         instead: one compiled program per kind, and dispatch geometry
         that is victim-independent by construction (the privacy-hardened
         mode the leakage benchmark gates on)."""
+        if self.profiler is not None:
+            with self.profiler.phase("bucket"):
+                return self._bucket_inner(kind, need, cap)
+        return self._bucket_inner(kind, need, cap)
+
+    def _bucket_inner(self, kind, need, cap) -> int:
         need = max(1, min(need, cap))
         if self.constant_shape:
             fixed = self._const_caps[kind]
@@ -631,6 +734,10 @@ class PagedContinuousBatcher(_BatcherBase):
     def _finish_slot(self, si):
         self._materialize_slot(si)
         super()._finish_slot(si)
+
+    def _profile_sync_target(self):
+        return (self.pool.pages, self._dev_gen) if self.fused \
+            else self.pool.pages
 
     # ---------------------------------------------------------- admission
     def _admit(self):
@@ -682,6 +789,7 @@ class PagedContinuousBatcher(_BatcherBase):
                 self._tickets.pop(rid, None)
                 self.finished[rid] = None
                 self.stats["rejected_too_large"] += 1
+                self._note_terminal(rid, "rejected", tier=tier)
                 continue
             if self.pool.free_count() < n_fresh:
                 # pool exhausted — leave the request queued; the engine
@@ -705,8 +813,14 @@ class PagedContinuousBatcher(_BatcherBase):
             toks = jnp.asarray(np.asarray(ids, np.int32)[None])
             cache = self.model.init_cache(1, self.max_len,
                                           dtype=jnp.bfloat16)
-            logits, dense = self._prefill(self.params, cache,
-                                          {"tokens": toks})
+            if self.profiler is not None:
+                with self.profiler.phase("dispatch_submit"):
+                    logits, dense = self._prefill(self.params, cache,
+                                                  {"tokens": toks})
+                self.profiler.add_ns("dispatch_submit", 0, dispatches=1)
+            else:
+                logits, dense = self._prefill(self.params, cache,
+                                              {"tokens": toks})
             self.stats["device_dispatches"] += 1
             # one fused scatter for the whole admission: shared chunks are
             # masked to the scratch page (their pool pages already hold
@@ -734,8 +848,8 @@ class PagedContinuousBatcher(_BatcherBase):
             self.stats["share_hits"] += len(shared)
             if ticket is not None and ticket.resumes_compute():
                 self.migration_stats["recomputes"] += 1
-            self._note_admission(rid, len(ids))
-            self._note_prefill_dispatch(len(ids), tier)
+            self._note_admission(rid, len(ids), slot=si)
+            self._note_prefill_dispatch(len(ids), tier, rid=rid, slot=si)
             if not pending:
                 self._note_first_token(rid)
 
@@ -802,6 +916,7 @@ class PagedContinuousBatcher(_BatcherBase):
                 or -(-total // self.page_size) > self.pool.num_pages - 1:
             self.finished[rid] = None
             self.stats["rejected_too_large"] += 1
+            self._note_terminal(rid, "rejected", tier=tier)
             return "rejected"
         # the plan holds every chunk that must DISPATCH: fresh chunks,
         # plus the last chunk even when shared IF the first token is still
@@ -839,7 +954,7 @@ class PagedContinuousBatcher(_BatcherBase):
             self.slots[si].pos = len(ids)    # decode-ready immediately
         self.stats["share_hits"] += len(shared)
         self.stats["prefix_tokens_skipped"] += skipped
-        self._note_admission(rid, len(ids))
+        self._note_admission(rid, len(ids), slot=si)
         rec = self.request_log.get(rid)
         if rec is not None:
             rec["tokens_skipped"] = rec.get("tokens_skipped", 0) + skipped
@@ -866,6 +981,7 @@ class PagedContinuousBatcher(_BatcherBase):
             # better placement (it prefers bouncing to the source)
             self.finished[rid] = None
             self.stats["rejected_too_large"] += 1
+            self._note_terminal(rid, "rejected", tier=t.tier)
             return "rejected"
         ps = self.page_size
         if t.pages and t.page_size == ps:
@@ -906,7 +1022,7 @@ class PagedContinuousBatcher(_BatcherBase):
                     self.migration_stats["imports"] += 1
                     self.migration_stats["imported_pages"] += copied
                     self.migration_stats["import_attach_hits"] += hits
-                    self._note_admission(rid, len(context))
+                    self._note_admission(rid, len(context), slot=si)
                     return "ok"
         # recompute-from-tokens fallback (forbidden or impossible import)
         status = self._admit_ids(si, rid, context, t.max_new, t.tier,
@@ -1053,7 +1169,8 @@ class PagedContinuousBatcher(_BatcherBase):
             if dst != SCRATCH_PAGE:
                 self.pool.register_prefix(dst, s.tier, chash, fill)
         self.stats["prefill_chunk_tokens"] += gtok
-        self._note_prefill_dispatch(gtok, s.tier)
+        self._note_prefill_dispatch(gtok, s.tier, rid=s.request_id,
+                                    slot=si)
         row = {"si": si, "group": group,
                "start": group[0][0] * self.page_size,
                "bt": self.block_tables[si].copy(),
@@ -1102,12 +1219,24 @@ class PagedContinuousBatcher(_BatcherBase):
             emit_slot[r] = row["emit_slot"]
             emit_off[r] = row["emit_off"]
             gen_idx[r] = row["gen_idx"]
-        self._dev_last, self._dev_gen, self.pool.pages = \
-            self._fused_prefill(
-                self.params, self.pool.pages, jnp.asarray(toks),
-                jnp.asarray(starts), jnp.asarray(bt), jnp.asarray(dst),
-                jnp.asarray(emit_slot), jnp.asarray(emit_off),
-                jnp.asarray(gen_idx), self._dev_last, self._dev_gen)
+        if self.profiler is not None:
+            with self.profiler.phase("dispatch_submit"):
+                self._dev_last, self._dev_gen, self.pool.pages = \
+                    self._fused_prefill(
+                        self.params, self.pool.pages, jnp.asarray(toks),
+                        jnp.asarray(starts), jnp.asarray(bt),
+                        jnp.asarray(dst), jnp.asarray(emit_slot),
+                        jnp.asarray(emit_off), jnp.asarray(gen_idx),
+                        self._dev_last, self._dev_gen)
+            self.profiler.add_ns("dispatch_submit", 0, dispatches=1)
+        else:
+            self._dev_last, self._dev_gen, self.pool.pages = \
+                self._fused_prefill(
+                    self.params, self.pool.pages, jnp.asarray(toks),
+                    jnp.asarray(starts), jnp.asarray(bt),
+                    jnp.asarray(dst), jnp.asarray(emit_slot),
+                    jnp.asarray(emit_off), jnp.asarray(gen_idx),
+                    self._dev_last, self._dev_gen)
         self.stats["device_dispatches"] += 1
 
     def _dispatch_chunks(self, si, group):
@@ -1139,13 +1268,24 @@ class PagedContinuousBatcher(_BatcherBase):
             toks[0, n * ps:n * ps + fill] = s.prompt_ids[j * ps:j * ps + fill]
             dst[n] = d
             fills += fill
-        logits, self.pool.pages = self._chunk_prefill(
-            self.params, self.pool.pages, jnp.asarray(toks),
-            jnp.int32(start), jnp.asarray(self.block_tables[si:si + 1, :w]),
-            jnp.asarray(dst))
+        if self.profiler is not None:
+            with self.profiler.phase("dispatch_submit"):
+                logits, self.pool.pages = self._chunk_prefill(
+                    self.params, self.pool.pages, jnp.asarray(toks),
+                    jnp.int32(start),
+                    jnp.asarray(self.block_tables[si:si + 1, :w]),
+                    jnp.asarray(dst))
+            self.profiler.add_ns("dispatch_submit", 0, dispatches=1)
+        else:
+            logits, self.pool.pages = self._chunk_prefill(
+                self.params, self.pool.pages, jnp.asarray(toks),
+                jnp.int32(start),
+                jnp.asarray(self.block_tables[si:si + 1, :w]),
+                jnp.asarray(dst))
         self.stats["device_dispatches"] += 1
         self.stats["prefill_chunk_tokens"] += fills
-        self._note_prefill_dispatch(fills, s.tier)
+        self._note_prefill_dispatch(fills, s.tier, rid=s.request_id,
+                                    slot=si)
         return logits
 
     # ----------------------------------------------------------- migration
@@ -1170,6 +1310,10 @@ class PagedContinuousBatcher(_BatcherBase):
         t = MigrationTicket(**self._resume_fields(s), kv_tokens=kv_tokens,
                             page_size=ps, pages=records,
                             phase="prefill" if mid_prefill else "decode")
+        if self.tracer is not None:
+            self._trace("freeze", rid=s.request_id, slot=si,
+                        phase=t.phase, kv_tokens=kv_tokens,
+                        pages=len(records))
         self.block_tables[si] = 0
         self.slots[si] = SlotState()
         return t
@@ -1328,6 +1472,9 @@ class PagedContinuousBatcher(_BatcherBase):
                 self._tickets[s.request_id] = MigrationTicket(
                     **self._resume_fields(s), phase="queued")
             self.preempted_rids.append(s.request_id)
+            if self.tracer is not None:
+                self._trace("preempt", rid=s.request_id, slot=victim,
+                            invested=invested(victim))
             self.slots[victim] = SlotState()
             self.stats["preemptions"] += 1
             for si in list(stalled):
@@ -1355,9 +1502,16 @@ class PagedContinuousBatcher(_BatcherBase):
         n_live = max(self.slots[si].pos // self.page_size + 1
                      for si in ready)
         self.dispatch_shapes.append(("decode", self.num_slots, n_live))
-        logits, self.pool.pages = self._decode_all(
-            self.params, self.pool.pages, jnp.asarray(toks),
-            jnp.asarray(poss), jnp.asarray(bt[:, :n_live]))
+        if self.profiler is not None:
+            with self.profiler.phase("dispatch_submit"):
+                logits, self.pool.pages = self._decode_all(
+                    self.params, self.pool.pages, jnp.asarray(toks),
+                    jnp.asarray(poss), jnp.asarray(bt[:, :n_live]))
+            self.profiler.add_ns("dispatch_submit", 0, dispatches=1)
+        else:
+            logits, self.pool.pages = self._decode_all(
+                self.params, self.pool.pages, jnp.asarray(toks),
+                jnp.asarray(poss), jnp.asarray(bt[:, :n_live]))
         self.stats["device_dispatches"] += 1
         nxt = self._sample_ready(logits, ready)
         self.stats["decode_steps"] += 1
@@ -1413,13 +1567,24 @@ class PagedContinuousBatcher(_BatcherBase):
                          max(self.slots[si].pos // self.page_size + 1
                              for si in ready), self.pages_per_seq)
         self.dispatch_shapes.append(("decode", self.num_slots, w))
-        logits, self._dev_last, self._dev_gen, self.pool.pages = \
-            self._fused_decode(
-                self.params, self.pool.pages, self._dev_last,
-                jnp.asarray(host_mask), jnp.asarray(toks),
-                jnp.asarray(poss), jnp.asarray(bt[:, :w]),
-                jnp.asarray(write_slot), jnp.asarray(gen_idx),
-                self._dev_gen)
+        if self.profiler is not None:
+            with self.profiler.phase("dispatch_submit"):
+                logits, self._dev_last, self._dev_gen, self.pool.pages = \
+                    self._fused_decode(
+                        self.params, self.pool.pages, self._dev_last,
+                        jnp.asarray(host_mask), jnp.asarray(toks),
+                        jnp.asarray(poss), jnp.asarray(bt[:, :w]),
+                        jnp.asarray(write_slot), jnp.asarray(gen_idx),
+                        self._dev_gen)
+            self.profiler.add_ns("dispatch_submit", 0, dispatches=1)
+        else:
+            logits, self._dev_last, self._dev_gen, self.pool.pages = \
+                self._fused_decode(
+                    self.params, self.pool.pages, self._dev_last,
+                    jnp.asarray(host_mask), jnp.asarray(toks),
+                    jnp.asarray(poss), jnp.asarray(bt[:, :w]),
+                    jnp.asarray(write_slot), jnp.asarray(gen_idx),
+                    self._dev_gen)
         self.stats["device_dispatches"] += 1
         nxt = None if greedy else self._sample_ready(logits, ready)
         self.stats["decode_steps"] += 1

@@ -43,6 +43,7 @@ from repro.core.waves import Decision, Request
 from repro.data.tokenizer import ByteTokenizer
 from repro.models.model import get_model
 from repro.models.steps import make_prefill_step, make_serve_step
+from repro.obs.metrics import latency_summary
 from repro.serving.kvpool import trust_tier_for_sensitivity
 from repro.serving.migration import MigrationTicket, ticket_fits
 
@@ -173,7 +174,6 @@ def aggregate_stats(log, rejected, registry):
     n = len(log)
     if n == 0:
         return {"n": 0, "rejected": len(rejected)}
-    lat = sorted(r.latency_ms for r in log)
     by_island = {}
     for r in log:
         by_island[r.island_id] = by_island.get(r.island_id, 0) + 1
@@ -191,8 +191,9 @@ def aggregate_stats(log, rejected, registry):
         "n": n,
         "rejected": len(rejected),
         "cost_total": sum(r.cost for r in log),
-        "latency_p50": lat[n // 2],
-        "latency_p95": lat[min(n - 1, int(0.95 * n))],
+        # the shared repo-wide percentile (obs.metrics) — bit-identical
+        # to the formula this function used to inline
+        **latency_summary(r.latency_ms for r in log),
         "privacy_violations": viol,
         "sanitized": sum(1 for r in log if r.sanitized),
         "by_island": by_island,
@@ -246,10 +247,18 @@ class TickOrchestrator:
 
     def __init__(self, waves, registry, batchers=None, seed=0,
                  decode_ticks_per_tick=4, tick_interval_s=0.05,
-                 migration_token_budget=512):
+                 migration_token_budget=512, tracer=None):
         self.waves = waves
         self.registry = registry
         self.batchers = batchers or {}
+        # optional span tracer (repro.obs.Tracer): orchestrator events
+        # (submit/route/migrate/complete) carry island=None; every island
+        # batcher is attached under its island id. Pure observation —
+        # nothing here may read it back into a scheduling decision.
+        self.tracer = tracer
+        if tracer is not None:
+            for iid, b in self.batchers.items():
+                b.attach_tracer(tracer, island=iid)
         self.cloud = CloudSimulator(seed)
         self.decode_ticks_per_tick = decode_ticks_per_tick
         self.tick_interval_s = tick_interval_s
@@ -285,6 +294,23 @@ class TickOrchestrator:
         if hook is not None:
             hook(self._on_island_deregistered)
 
+    def _otrace(self, kind, rid=None, **attrs):
+        """Orchestrator-scope span event: tick = orchestrator tick, work
+        = the mesh work clock (sum over LIVE batchers — an island failure
+        drops its clock, so this stamp is not monotonic across churn)."""
+        if self.tracer is not None:
+            # an "island" kwarg here is an *attribute* (e.g. the chosen
+            # route target) — orchestrator events keep scope island=None,
+            # so lift it out of the way of emit()'s own parameter
+            island_attr = attrs.pop("island", None)
+            ev = self.tracer.emit(kind, island=None, rid=rid,
+                                  tick=self.tick_stats["ticks"],
+                                  work=sum(b.work_clock
+                                           for b in self.batchers.values()),
+                                  **attrs)
+            if island_attr is not None:
+                ev.attrs["island"] = island_attr
+
     # --------------------------------------------------------- submission
     def submit(self, req: Request, max_new_tokens=12) -> int:
         """Enqueue; returns a request id resolved in ``results`` once the
@@ -295,6 +321,9 @@ class TickOrchestrator:
                                            self.waves.tide.clock))
         self.tick_stats["pool_peak"] = max(self.tick_stats["pool_peak"],
                                            len(self.pending))
+        if self.tracer is not None:
+            self._otrace("submit", rid=rid, priority=req.priority,
+                         max_new=max_new_tokens)
         return rid
 
     def submit_sync(self, req: Request, max_new_tokens=12,
@@ -341,6 +370,7 @@ class TickOrchestrator:
             p, _d = self._local_inflight.pop(key)
             p.ticket = None
             self.pending.append(p)
+            self._otrace("failover", rid=p.rid, island=island_id)
             n += 1
         still = []
         for item in self._sim_inflight:
@@ -348,6 +378,7 @@ class TickOrchestrator:
             if d.island.island_id == island_id:
                 p.ticket = None
                 self.pending.append(p)
+                self._otrace("failover", rid=p.rid, island=island_id)
                 n += 1
             else:
                 still.append(item)
@@ -378,6 +409,8 @@ class TickOrchestrator:
             self._local_inflight[(t.source, brid)] = (p, p.decision)
             self._unmovable.add((t.source, brid))
             self.tick_stats["migration_returns"] += 1
+            self._otrace("migrate_return", rid=p.rid, island=t.source,
+                         brid=brid)
             return True
         return False
 
@@ -441,6 +474,9 @@ class TickOrchestrator:
                     # (partial KV) and still-queued (nothing yet) tickets
                     budget -= max(t.kv_tokens, len(t.generated), 1)
                     self.tick_stats["migrations_started"] += 1
+                    self._otrace("migrate_out", rid=p.rid, island=iid,
+                                 brid=key[1], kv_tokens=t.kv_tokens,
+                                 phase=t.phase)
 
     def _finalize_drains(self):
         """End-of-tick drain completion check (after deliveries, so the
@@ -588,6 +624,14 @@ class TickOrchestrator:
         self._service_draining()
         pool, self.pending = self.pending, []
         if pool:
+            if self.tracer is not None:
+                # per-island capacity snapshot for this routing pass —
+                # peek_capacity is the side-effect-free read (capacity()
+                # would advance TIDE's EWMA state and perturb routing)
+                self._otrace("route_tick", pool=len(pool), capacities={
+                    i.island_id: round(
+                        waves.tide.peek_capacity(i.island_id), 4)
+                    for i in self.registry.all()})
             for p, d in zip(pool, self._route_pool(pool)):
                 if not d.accepted:
                     # nowhere to migrate: the draining source keeps it
@@ -599,9 +643,16 @@ class TickOrchestrator:
                         continue
                     self.rejected.append(d)
                     self.results[p.rid] = None
+                    self._otrace("reject", rid=p.rid, reason=d.reason)
                     continue
                 self.tick_stats["routed"] += 1
                 island = d.island
+                self._otrace("route", rid=p.rid,
+                             island=island.island_id,
+                             score=(round(d.score, 4)
+                                    if d.score is not None else None),
+                             reason=d.reason,
+                             n_candidates=d.n_candidates)
                 query = (d.sanitized_history[-1] if d.sanitize
                          else p.req.query)
                 b = self.batchers.get(island.island_id)
@@ -610,6 +661,8 @@ class TickOrchestrator:
                     # the new island sanitizes differently: nothing
                     # computed for the old text is reusable (fail closed)
                     self.tick_stats["restarts"] += 1
+                    self._otrace("restart", rid=p.rid,
+                                 reason="sanitize_mismatch")
                     tkt = None
                 if b is not None:
                     if tkt is not None and not self._ticket_fits(b, tkt):
@@ -619,6 +672,8 @@ class TickOrchestrator:
                         if self._return_to_source(p, tkt):
                             continue
                         self.tick_stats["restarts"] += 1
+                        self._otrace("restart", rid=p.rid,
+                                     reason="ticket_too_large")
                         tkt = None
                     if tkt is not None:
                         if (tkt.pages or tkt.dense is not None) and \
@@ -628,6 +683,12 @@ class TickOrchestrator:
                             # the progress, recompute the context
                             tkt = tkt.without_pages()
                         brid = b.submit_ticket(tkt)
+                        self._otrace("migrate_in", rid=p.rid,
+                                     island=island.island_id, brid=brid,
+                                     source=tkt.source,
+                                     with_pages=bool(tkt.pages
+                                                     or tkt.dense
+                                                     is not None))
                         # drain pressure: thawing a context is real work
                         # for the destination (page copies or a recompute
                         # prefill — both scale with the context length) —
@@ -645,6 +706,8 @@ class TickOrchestrator:
                             query, p.max_new_tokens,
                             trust_tier=trust_tier_for_sensitivity(
                                 d.sensitivity))
+                        self._otrace("dispatch", rid=p.rid,
+                                     island=island.island_id, brid=brid)
                     self._local_inflight[(island.island_id, brid)] = (p, d)
                 else:
                     # simulated executor: a cross-executor move cannot
@@ -653,10 +716,15 @@ class TickOrchestrator:
                     # SHORE)
                     if tkt is not None:
                         self.tick_stats["restarts"] += 1
+                        self._otrace("restart", rid=p.rid,
+                                     reason="cross_executor")
                     text, exec_ms = self.cloud.complete(island, query)
                     ready = waves.tide.clock + \
                         (island.latency_ms + exec_ms) / 1000.0
                     self._sim_inflight.append((ready, p, d, text, exec_ms))
+                    self._otrace("dispatch_sim", rid=p.rid,
+                                 island=island.island_id,
+                                 exec_ms=round(exec_ms, 3))
         # SHORE: continuous-batching decode steps
         for iid, b in self.batchers.items():
             blocked = 0            # accumulated: b.tick() resets its count
@@ -678,6 +746,8 @@ class TickOrchestrator:
                 if text is None:       # executor-level rejection (e.g. the
                     self.rejected.append(d)    # request can't fit the pool)
                     self.results[p.rid] = None
+                    self._otrace("reject", rid=p.rid, island=iid,
+                                 reason="executor")
                     continue
                 completed.append(self._complete(p, d, text))
             # KV-pool pressure feedback + telemetry (paged batchers only)
@@ -771,6 +841,8 @@ class TickOrchestrator:
                         decision=d, island_privacy=d.island.privacy)
         self.log.append(resp)
         self.results[p.rid] = resp
+        self._otrace("complete", rid=p.rid, island=d.island.island_id,
+                     latency_ms=round(latency, 3))
         return resp
 
     # ------------------------------------------------------------ control

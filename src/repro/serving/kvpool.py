@@ -219,6 +219,11 @@ class PagePool:
         # OWN tier's sharing behaviour, and the aggregated view must be
         # computable without walking page metadata on every report
         self.tier_stats: dict = {}
+        # optional span-trace hook (set by the owning batcher's
+        # ``attach_tracer``): called as hook(kind, **attrs) on page
+        # alloc / COW / prefix-share hits. Pure observation — never
+        # consulted for any allocation decision.
+        self.trace_hook = None
         self.pages = None
         self._write_pages_fn = None
         self._copy_page_fn = None
@@ -345,6 +350,9 @@ class PagePool:
         self._tstat(tier)["allocs"] += 1
         self.stats["peak_in_use"] = max(self.stats["peak_in_use"],
                                         self.in_use())
+        if self.trace_hook is not None:
+            self.trace_hook("page_alloc", page=pid, tier=tier,
+                            in_use=self.in_use())
         return pid
 
     def incref(self, pid: int):
@@ -379,6 +387,8 @@ class PagePool:
         assert self._meta[pid].tier == tier      # impossible by construction
         self.stats["share_hits"] += 1
         self._tstat(tier)["share_hits"] += 1
+        if self.trace_hook is not None:
+            self.trace_hook("page_share", page=pid, tier=tier)
         return pid
 
     def register_prefix(self, pid: int, tier: Optional[int], chash: str,
@@ -417,6 +427,8 @@ class PagePool:
                                             jnp.int32(new))
         self.decref(pid)
         self.stats["cow_copies"] += 1
+        if self.trace_hook is not None:
+            self.trace_hook("page_cow", page=pid, new_page=new)
         return new
 
     # ----------------------------------------------------------- device I/O

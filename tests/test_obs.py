@@ -1,0 +1,306 @@
+"""Observability layer: the span tracer's zero-interference contract,
+span-work conservation, request-log lifecycle under preemption and
+migration, the shared percentile helpers' bit-parity with the legacy
+formulas, the dispatch profiler, the Chrome-trace exporter, and the
+tenant-view hardening boundary.
+
+The load-bearing invariants pinned here:
+
+* attaching a tracer + profiler changes NOTHING the stack computes —
+  greedy streams bit-exact, work clock equal;
+* every dispatched work-clock unit is attributed to exactly one request
+  (prefill ``tokens`` + decode row membership sums to ``work_clock``);
+* TTFT is recorded exactly once per request, even when the request is
+  preempted or migrated after its first token;
+* every submitted request ends with a terminal record (``done_tick`` /
+  ``outcome``) after ``run_until_done``.
+"""
+import json
+
+import pytest
+
+from repro.configs.base import get_config
+from repro.obs import (DispatchProfiler, MetricsRegistry, Tracer,
+                       collect_batcher_metrics, latency_summary, percentile,
+                       summarize, ttft_stats, write_chrome_trace)
+from repro.serving.batcher import PagedContinuousBatcher
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("smollm-135m").reduced()
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    import jax
+
+    from repro.models.model import get_model
+    return get_model(cfg).init(jax.random.PRNGKey(0), "float32")
+
+
+PREFIX = "shared observability preamble for the span tests. "
+WL = [
+    (PREFIX + "alpha " * 6, 6, 1),
+    (PREFIX + "beta " * 3, 5, 1),
+    ("an unrelated billing question about invoices", 6, 2),
+    ("tiny", 4, None),
+]
+
+
+def _drive(cfg, params, traced, workload=WL, **kw):
+    kw.setdefault("num_slots", 3)
+    kw.setdefault("max_len", 96)
+    kw.setdefault("page_size", 16)
+    b = PagedContinuousBatcher(cfg, params=params, fused=True, **kw)
+    tr = None
+    if traced:
+        tr = Tracer()
+        b.attach_tracer(tr, island="isl")
+        b.profiler = DispatchProfiler()
+    rids = [b.submit(p, max_new_tokens=mn, trust_tier=t)
+            for p, mn, t in workload]
+    done = b.run_until_done()
+    return {"b": b, "tr": tr, "rids": rids,
+            "streams": [done[r] for r in rids]}
+
+
+@pytest.fixture(scope="module")
+def ab(cfg, params):
+    """One untraced + one traced run of the same workload (shared by the
+    zero-interference, conservation, exporter and profiler tests)."""
+    return _drive(cfg, params, False), _drive(cfg, params, True)
+
+
+# --------------------------------------------------------- pure helpers
+
+def test_percentile_matches_legacy_formulas():
+    """The shared helper must reproduce BOTH historical inline formulas
+    bit-for-bit: ``lat[n // 2]`` (engine p50) and
+    ``sorted[min(n-1, int(q*n))]`` (benchmark p95) — artifacts must not
+    move under the dedup."""
+    for vals in ([3.0], [5.0, 1.0], [9, 2, 7, 4, 1], list(range(17))):
+        s = sorted(vals)
+        n = len(s)
+        assert percentile(vals, 0.5) == s[n // 2]
+        assert percentile(vals, 0.95) == s[min(n - 1, int(0.95 * n))]
+    assert percentile([], 0.5) is None
+
+
+def test_latency_summary_matches_engine_formula():
+    lats = [12.0, 3.5, 99.0, 42.0, 7.0, 7.0]
+    s = sorted(lats)
+    out = latency_summary(lats)
+    assert out == {"latency_p50": s[len(s) // 2],
+                   "latency_p95": s[min(len(s) - 1, int(0.95 * len(s)))]}
+    assert latency_summary([]) == {}
+
+
+def test_summarize_and_registry_snapshot():
+    reg = MetricsRegistry()
+    reg.inc("requests", 3)
+    reg.observe_many("ttft_work", [4, 9, 2])
+    snap = reg.snapshot()
+    assert snap["counters"]["requests"] == 3
+    h = snap["histograms"]["ttft_work"]
+    assert (h["n"], h["min"], h["max"]) == (3, 2, 9)
+    assert summarize([], "x") == {"x_n": 0}
+
+
+# ------------------------------------------------- zero interference
+
+def test_tracing_zero_interference(ab):
+    off, on = ab
+    assert on["streams"] == off["streams"]
+    assert on["b"].work_clock == off["b"].work_clock
+    assert on["b"].stats["device_dispatches"] == \
+        off["b"].stats["device_dispatches"]
+
+
+def test_span_work_conservation(ab):
+    _off, on = ab
+    tr = on["tr"]
+    cons = tr.conservation_ok({"isl": on["b"]})
+    assert cons == {"isl": True, "all": True}
+    # and the attribution is per-request, not just in aggregate
+    per = tr.work_by_island()["isl"]
+    assert sum(per.values()) == on["b"].work_clock
+    assert set(per) == set(on["rids"])
+
+
+def test_first_token_and_terminals(ab):
+    _off, on = ab
+    tr, b = on["tr"], on["b"]
+    assert all(v == 1 for v in tr.first_token_counts().values())
+    assert len(tr.first_token_counts()) == len(on["rids"])
+    assert len(tr.by_kind("finish")) == len(on["rids"])
+    for rid in on["rids"]:
+        rec = b.request_log[rid]
+        assert rec["outcome"] == "completed"
+        assert "done_tick" in rec and "done_work" in rec
+        assert rec["generated_tokens"] > 0
+
+
+def test_pool_events_traced(ab):
+    _off, on = ab
+    tr = on["tr"]
+    assert len(tr.by_kind("page_alloc")) > 0
+    assert len(tr.by_kind("page_share")) > 0   # WL shares a prompt head
+
+
+def test_collect_batcher_metrics(ab):
+    _off, on = ab
+    snap = collect_batcher_metrics(on["b"]).snapshot()
+    assert snap["counters"]["requests"] == len(on["rids"])
+    assert snap["histograms"]["ttft_work"]["n"] == len(on["rids"])
+    assert snap["histograms"]["pool_pages_peak"]["n"] == 1
+    # tpot on the work clock: >= 1 by construction (each decode token
+    # costs at least its own work unit)
+    assert snap["histograms"]["tpot_work"]["min"] >= 1.0
+
+
+def test_ttft_stats_delegation(ab):
+    _off, on = ab
+    b = on["b"]
+    out = ttft_stats(b.request_log)
+    recs = [r for r in b.request_log.values() if "ttft_work" in r]
+    work = sorted(r["ttft_work"] for r in recs)
+    assert out["ttft_work_p50"] == work[len(work) // 2]
+    sub = ttft_stats(b.request_log, rids=on["rids"][:2])
+    assert sub["ttft_work_p50"] in {
+        b.request_log[r]["ttft_work"] for r in on["rids"][:2]}
+    assert ttft_stats({}) == {}
+
+
+# ------------------------------------------- lifecycle under churn
+
+def test_ttft_once_and_terminals_under_preemption(cfg, params):
+    """Pool-exhaustion preemption recycles requests through freeze/thaw;
+    TTFT must still be recorded exactly once (the thaw carries it) and
+    every rid must end with a terminal record."""
+    wl = [(f"tiny seed {i}", 40, i % 2) for i in range(4)]
+    out = _drive(cfg, params, True, workload=wl, num_pages=6)
+    b, tr = out["b"], out["tr"]
+    assert b.stats["preemptions"] > 0
+    assert len(tr.by_kind("preempt")) == b.stats["preemptions"]
+    assert all(v == 1 for v in tr.first_token_counts().values())
+    for rid in out["rids"]:
+        rec = b.request_log[rid]
+        assert rec["outcome"] == "completed"
+        assert "ttft_work" in rec
+    assert tr.conservation_ok({"isl": b})["all"]
+
+
+def test_request_log_migration_carry(cfg, params):
+    """Freeze mid-decode on island a, thaw on island b: the destination
+    record carries the migration count and the already-recorded TTFT is
+    NOT re-recorded (``first_token`` fires only where the token was
+    actually produced), and the journal shows freeze -> thaw_queue with
+    one terminal finish."""
+    tr = Tracer()
+    a = PagedContinuousBatcher(cfg, params=params, num_slots=2,
+                               max_len=96, page_size=16)
+    b = PagedContinuousBatcher(cfg, params=params, num_slots=2,
+                               max_len=96, page_size=16)
+    a.attach_tracer(tr, island="a")
+    b.attach_tracer(tr, island="b")
+    rid = a.submit(PREFIX + "migrating request", max_new_tokens=6,
+                   trust_tier=2)
+    for _ in range(4):              # well into decode
+        a.tick()
+    assert "ttft_work" in a.request_log[rid]
+    t = a.freeze_request(rid)
+    assert t is not None and t.phase == "decode"
+    brid = b.submit_ticket(t)
+    b.run_until_done()
+    rec = b.request_log[brid]
+    assert rec["migrations"] == 1
+    assert rec["outcome"] == "completed"
+    assert len(tr.by_kind("freeze")) == 1
+    assert len(tr.by_kind("thaw_queue")) == 1
+    assert len(tr.by_kind("finish")) == 1
+    # first token was produced on a; b never re-fires it
+    assert list(tr.first_token_counts()) == [("a", rid)]
+    # conservation holds per island across the handoff
+    assert tr.conservation_ok({"a": a, "b": b})["all"]
+
+
+# ------------------------------------------------------- profiler
+
+def test_profiler_report(ab):
+    _off, on = ab
+    rep = on["b"].profiler.report()
+    assert rep["ticks"] == on["b"].stats["ticks"]
+    assert rep["dispatches"] == on["b"].stats["device_dispatches"]
+    for p in ("host_plan", "bucket", "dispatch_submit", "device_sync"):
+        assert f"{p}_ms" in rep and f"{p}_frac" in rep
+    assert rep["unique_shapes"] >= 1
+    assert rep["shape_dispatches"] == len(on["b"].dispatch_shapes)
+
+
+# -------------------------------------------------------- exporter
+
+def test_chrome_trace_export(ab, tmp_path):
+    _off, on = ab
+    path = tmp_path / "trace.json"
+    n = write_chrome_trace(on["tr"], str(path))
+    doc = json.loads(path.read_text())
+    evs = doc["traceEvents"]
+    assert n == len(evs) > 0
+    assert all(set(e) >= {"ph", "pid", "tid", "ts"} or e["ph"] == "M"
+               for e in evs)
+    # B/E balance per (pid, tid): residency + queue spans all close
+    depth = {}
+    for e in evs:
+        if e["ph"] == "B":
+            depth[(e["pid"], e["tid"])] = \
+                depth.get((e["pid"], e["tid"]), 0) + 1
+        elif e["ph"] == "E":
+            depth[(e["pid"], e["tid"])] = \
+                depth.get((e["pid"], e["tid"]), 0) - 1
+    assert all(v == 0 for v in depth.values()), depth
+    # flow arrows come in start/finish pairs
+    starts = sum(1 for e in evs if e["ph"] == "s")
+    finishes = sum(1 for e in evs if e["ph"] == "f")
+    assert starts == finishes
+
+
+# ------------------------------------------------ tenant boundary
+
+def test_tenant_summary_hardened(ab):
+    """The only tenant-visible projection: mesh-wide counts over visible
+    tiers, pushed through the SAME hardening as lighthouse telemetry —
+    never under-reported, quantized, deterministic."""
+    from repro.core.lighthouse import TelemetryPolicy
+    _off, on = ab
+    tr = on["tr"]
+    pol = TelemetryPolicy()
+    view = tr.tenant_summary(pol, viewer_tier=2)
+    true_finishes = sum(
+        1 for e in tr.by_kind("finish")
+        if isinstance(e.attrs.get("tier"), int) and e.attrs["tier"] >= 2)
+    assert view["viewer_tier"] == 2
+    assert view["requests_completed"] >= true_finishes
+    assert view == tr.tenant_summary(pol, viewer_tier=2)  # deterministic
+    # a tier-1 viewer sees MORE visible tiers, never fewer events
+    v1 = tr.tenant_summary(pol, viewer_tier=1)
+    assert v1["requests_completed"] >= true_finishes
+
+
+def test_peek_capacity_is_pure():
+    """``TIDE.peek_capacity`` must match ``capacity`` without mutating
+    the EWMA exhaustion-prediction state (the tracer's per-tick snapshot
+    must not perturb routing)."""
+    from repro.core.islands import IslandRegistry, personal_island
+    from repro.core.tide import TIDE
+    reg = IslandRegistry()
+    isl = personal_island("x", latency_ms=100, capacity_units=2.0)
+    reg.register(isl, reg.attestation_token("x"))
+    tide = TIDE(reg)
+    tide.add_load("x", 1.0)
+    before = (tide._st("x").ewma_r, tide._st("x").ewma_slope)
+    peeked = tide.peek_capacity("x")
+    assert (tide._st("x").ewma_r, tide._st("x").ewma_slope) == before
+    assert peeked == tide.capacity("x")      # capacity mutates...
+    after = (tide._st("x").ewma_r, tide._st("x").ewma_slope)
+    assert after != before                    # ...peek did not
