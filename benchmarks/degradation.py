@@ -1,0 +1,292 @@
+"""Graceful-degradation benchmark: the serving mesh under a scripted
+``FaultPlan`` — slowdown (straggler hedging), burst overload (shedding +
+backpressure), telemetry staleness, and a mid-migration failure (drain
+whose source dies with tickets still in flight) — against a fault-free
+run of the SAME workload.
+
+Per the noisy-wallclock rule, only DETERMINISTIC metrics gate the run
+(greedy decoding, work-clock deadlines, seeded workloads, value-keyed
+telemetry noise):
+
+* ``zero_stranded`` — every submitted request (workload + burst)
+  reaches EXACTLY one terminal: completed, shed, backpressure-bounced,
+  or expired. Verified two ways: every rid resolves in
+  ``orch.results``, and the span tracer's ``terminals_exactly_once``
+  over ALL rids (no request lost, none double-completed).
+* ``expired_within_bound`` — the faulted run expires at least one
+  deadline request (the SLO path is exercised) and no more than the
+  requests that declared deadlines; the fault-free run expires none.
+* ``bitexact_non_expired`` — every request that completes in BOTH runs
+  produces a bit-identical token stream: faults cost work, never
+  correctness.
+* ``shed_exercised`` / ``backpressure_exercised`` /
+  ``hedge_exercised`` — the overload ladder actually fired: watermark
+  shedding on the burst, submit-time backpressure on the second burst
+  wave (read through the hardened tier-scoped saturation hint), and at
+  least one straggler hedge off the slowed island.
+* ``audits_ok`` — ``debug_audit=True`` ran ``PagePool.audit()`` on
+  every island at EVERY tick of the faulted run (it raises on any
+  refcount/table violation) and end-state pools are empty.
+* ``quota_attack_*`` — the seventh adversary attack (scheduling
+  interference): per-tier quotas ON hold the probe-timing channel at
+  <= chance + 0.05 while the positive control (quotas OFF) leaks by
+  >= chance + 0.25.
+
+``--json`` writes the ``BENCH_degradation.json`` artifact. Failed
+checks exit nonzero — that is the CI gate.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+
+from repro.configs.base import get_config
+from repro.core.islands import IslandRegistry, personal_island
+from repro.core.lighthouse import Lighthouse
+from repro.core.mist import MIST
+from repro.core.tide import TIDE
+from repro.core.waves import WAVES, Policy, Request
+from repro.obs import Tracer
+from repro.privacy.adversary import Mitigations, run_attack_suite
+from repro.serving.degrade import (FaultEvent, FaultPlan, OverloadPolicy,
+                                   RejectReason)
+from repro.serving.engine import (LocalModelServer, TickOrchestrator,
+                                  build_island_batchers)
+
+SLACK = 0.05             # quotas-on accuracy must be <= chance + SLACK
+POSITIVE_MARGIN = 0.25   # quotas-off accuracy must be >= chance + this
+DEADLINE_WORK = 520.0    # deadline_ms for the SLO-tagged requests:
+                         # above the fault-free run's TOTAL mesh work
+                         # (so they can never expire there), blown in
+                         # the faulted run when the burst piles extra
+                         # work onto the mesh before they finish
+
+_FAILED_CHECKS: list = []
+
+
+def _workload():
+    """Deterministic mixed workload: primary interactive requests, a
+    couple of sheddable burstables, and two secondary requests carrying
+    a work-clock deadline (the SLO-expiry candidates)."""
+    out = []
+    for i in range(6):
+        out.append((f"primary interactive request number {i} with some "
+                    f"padding text", "primary", math.inf))
+    for i in range(2):
+        out.append((f"burstable background job {i} crunching a batch",
+                    "burstable", math.inf))
+    for i in range(2):
+        # primary so admission never bounces them: the only way they can
+        # fail is the SLO budget itself (expiry is priority-blind)
+        out.append((f"primary deadline-tagged request {i} that must "
+                    f"finish soon", "primary", DEADLINE_WORK))
+    return out
+
+
+def _burst_submit(wave):
+    """A burst wave: 14 short sheddable requests, unique per wave so no
+    accidental prefix sharing muddies the run."""
+    def fire(orch):
+        for k in range(14):
+            orch.submit(Request(query=f"burst w{wave} req {k} spam",
+                                priority="secondary",
+                                sensitivity_override=0.9),
+                        max_new_tokens=4)
+    return fire
+
+
+def _build_mesh(cfg, params, overload, straggler_patience, tracer):
+    reg = IslandRegistry()
+    for isl in [personal_island("laptop", latency_ms=120,
+                                capacity_units=2.0),
+                personal_island("desktop", latency_ms=150,
+                                capacity_units=2.0),
+                personal_island("nas", latency_ms=200,
+                                capacity_units=2.0)]:
+        reg.register(isl, reg.attestation_token(isl.island_id))
+    mist = MIST()
+    tide = TIDE(reg, straggler_patience=straggler_patience)
+    lh = Lighthouse(reg)
+    for i in reg.all():
+        lh.heartbeat(i.island_id)
+    waves = WAVES(mist, tide, lh, Policy())
+    bats = build_island_batchers(cfg, reg, cache="paged", max_len=96,
+                                 slots_per_capacity_unit=2.0,
+                                 params=params)
+    orch = TickOrchestrator(waves, reg, bats, decode_ticks_per_tick=1,
+                            migration_token_budget=64,
+                            overload=overload, debug_audit=True,
+                            tracer=tracer)
+    return orch, dict(bats)
+
+
+def drive(cfg, params, plan: FaultPlan | None, max_ticks=600):
+    """Run the workload (plus whatever bursts the plan injects) to
+    completion under the plan's faults; fault-free when ``plan`` is
+    None."""
+    tracer = Tracer()
+    overload = OverloadPolicy(queue_watermark=12, backpressure_pct=100)
+    orch, all_bats = _build_mesh(cfg, params, overload,
+                                 straggler_patience=3, tracer=tracer)
+    rids = [orch.submit(Request(query=q, priority=pr, deadline_ms=dl,
+                                sensitivity_override=0.9),
+                        max_new_tokens=16)
+            for q, pr, dl in _workload()]
+    while orch.busy() and orch.tick_stats["ticks"] < max_ticks:
+        if plan is not None:
+            plan.step(orch)
+        orch.tick()
+    all_rids = list(range(orch._next_rid))     # workload + burst submits
+    texts = {r: (orch.results[r].text if orch.results.get(r) else None)
+             for r in all_rids}
+    audits_ok = all(b.pool.audit() and b.pool.in_use() == 0
+                    for b in orch.batchers.values())
+    reasons = {}
+    for d in orch.rejected:
+        reasons[str(d.reason)] = reasons.get(str(d.reason), 0) + 1
+    return {
+        "texts": texts,
+        "workload_rids": rids,
+        "ticks": orch.tick_stats["ticks"],
+        "work_clock": orch.mesh_work,
+        "expired": orch.tick_stats["expired"],
+        "shed": orch.tick_stats["shed"],
+        "backpressure_rejects": orch.tick_stats["backpressure_rejects"],
+        "hedges": orch.tick_stats["hedges"],
+        "failovers": orch.tick_stats["failovers"],
+        "migrations_started": orch.tick_stats["migrations_started"],
+        "reject_reasons": reasons,
+        "unresolved": sum(1 for r in all_rids if r not in orch.results),
+        "terminals_exactly_once": tracer.terminals_exactly_once(all_rids),
+        "audits_ok": audits_ok,
+        "applied": list(plan.applied) if plan is not None else [],
+    }
+
+
+def make_plan() -> FaultPlan:
+    """The scripted fault schedule (ticks are orchestrator ticks):
+
+    t1   slowdown laptop x4 (work stalls; TIDE flags it, engine hedges)
+    t3   burst wave 1 -> watermark shed + saturation hint published
+    t4   burst wave 2 -> submit-time backpressure bounces it
+    t6   telemetry goes stale (readers see last counters)
+    t8   telemetry resumes
+    t9   drain desktop, then
+    t10  kill desktop mid-migration (tickets still in flight)
+    t14  laptop recovers to full speed
+    """
+    plan = FaultPlan()
+    plan.add(FaultEvent(1, "slowdown", island="laptop", factor=4))
+    plan.add(FaultEvent(3, "burst", submit=_burst_submit(1)))
+    plan.add(FaultEvent(4, "burst", submit=_burst_submit(2)))
+    plan.add(FaultEvent(6, "telemetry_stale", on=True))
+    plan.add(FaultEvent(8, "telemetry_stale", on=False))
+    plan.add(FaultEvent(9, "drain", island="desktop"))
+    plan.add(FaultEvent(10, "kill", island="desktop"))
+    plan.add(FaultEvent(14, "recover", island="laptop"))
+    return plan
+
+
+def quota_attack_ab(cfg, params, lines):
+    """The seventh adversary attack, quotas off (positive control) vs on
+    (mitigated) — the scheduling-interference channel the per-tier
+    quotas exist to close."""
+    out = {}
+    for label, mit in (("off", Mitigations.off()), ("on", Mitigations.on())):
+        r = run_attack_suite(cfg, params, mit,
+                             include={"scheduling_interference"})
+        a = r["scheduling_interference"]
+        out[label] = {"accuracy": a.accuracy, "chance": a.chance,
+                      "n_test": a.n_test}
+        lines.append((f"degrade/quota_attack_{label}", 0.0,
+                      f"acc={a.accuracy:.2f} chance={a.chance:.2f}"))
+    return out
+
+
+def run(json_path=None):
+    lines = []
+    cfg = get_config("smollm-135m").reduced()
+    params = LocalModelServer(cfg, max_len=160).params
+
+    base = drive(cfg, params, None)
+    plan = make_plan()
+    fault = drive(cfg, params, plan)
+
+    n_deadline = sum(1 for _q, _p, dl in _workload() if math.isfinite(dl))
+    both = [r for r in fault["workload_rids"]
+            if fault["texts"].get(r) is not None
+            and base["texts"].get(r) is not None]
+    bitexact = all(fault["texts"][r] == base["texts"][r] for r in both)
+
+    checks = {
+        "plan_fully_applied": len(fault["applied"]) == len(plan.events),
+        "zero_stranded":
+            fault["unresolved"] == 0 and base["unresolved"] == 0
+            and fault["terminals_exactly_once"]
+            and base["terminals_exactly_once"],
+        "expired_within_bound":
+            1 <= fault["expired"] <= n_deadline and base["expired"] == 0,
+        "bitexact_non_expired": len(both) >= 6 and bitexact,
+        "shed_exercised": fault["shed"] >= 1 and base["shed"] == 0,
+        "backpressure_exercised":
+            fault["backpressure_rejects"] >= 1
+            and base["backpressure_rejects"] == 0,
+        "hedge_exercised": fault["hedges"] >= 1 and base["hedges"] == 0,
+        "mid_migration_failover": fault["failovers"] >= 1,
+        "audits_ok": fault["audits_ok"] and base["audits_ok"],
+        "typed_reject_reasons": set(fault["reject_reasons"]) <= {
+            str(m) for m in RejectReason},
+    }
+
+    quota = quota_attack_ab(cfg, params, lines)
+    checks["quota_attack_mitigated"] = (
+        quota["on"]["accuracy"] <= quota["on"]["chance"] + SLACK)
+    checks["quota_attack_positive_control"] = (
+        quota["off"]["accuracy"] >= quota["off"]["chance"]
+        + POSITIVE_MARGIN)
+
+    for label, r in (("fault_free", base), ("faulted", fault)):
+        lines.append((f"degrade/{label}", 0.0,
+                      f"ticks={r['ticks']} work={r['work_clock']}"
+                      f" expired={r['expired']} shed={r['shed']}"
+                      f" bp={r['backpressure_rejects']}"
+                      f" hedges={r['hedges']}"
+                      f" failovers={r['failovers']}"
+                      f" unresolved={r['unresolved']}"))
+    lines.append(("degrade/bitexact_non_expired", 0.0,
+                  f"compared={len(both)} bitexact={bitexact}"))
+
+    artifact = {
+        "fault_free": {k: v for k, v in base.items() if k != "texts"},
+        "faulted": {k: v for k, v in fault.items() if k != "texts"},
+        "compared_streams": len(both),
+        "deadline_work": DEADLINE_WORK,
+        "n_deadline_requests": n_deadline,
+        "quota_attack": quota,
+        "slack": SLACK,
+        "positive_margin": POSITIVE_MARGIN,
+        "checks": checks,
+    }
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(artifact, f, indent=2, sort_keys=True)
+        lines.append(("degrade/artifact", 0.0, json_path))
+
+    global _FAILED_CHECKS
+    _FAILED_CHECKS = [k for k, ok in checks.items() if not ok]
+    for k in _FAILED_CHECKS:
+        lines.append((f"degrade/CHECK_FAILED/{k}", 0.0, "see artifact"))
+    return lines
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the BENCH_degradation.json artifact here")
+    args = ap.parse_args()
+    for row in run(json_path=args.json):
+        print(row)
+    if _FAILED_CHECKS:
+        raise SystemExit(
+            f"degradation acceptance checks failed: {_FAILED_CHECKS}")

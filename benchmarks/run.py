@@ -10,8 +10,9 @@ import time
 
 
 def main() -> None:
-    from benchmarks import (feature_matrix, kernels_micro, leakage, micro,
-                            roofline, routing_policies, serving)
+    from benchmarks import (degradation, feature_matrix, kernels_micro,
+                            leakage, micro, roofline, routing_policies,
+                            serving)
     t0 = time.time()
     print("name,us_per_call,derived")
     modules = [
@@ -20,6 +21,7 @@ def main() -> None:
         ("micro", micro.run),
         ("serving", serving.run),
         ("leakage", leakage.run),
+        ("degradation", degradation.run),
         ("kernels_micro", kernels_micro.run),
         ("roofline", roofline.run),
     ]

@@ -41,6 +41,10 @@ class TelemetryPolicy:
     noise: bool = True
     quantum_pages: int = 4
     quantum_tokens: int = 64
+    # granularity of the mesh-saturation hint (percent): coarse enough
+    # that the backpressure signal cannot fingerprint another tenant's
+    # load, fine enough for WAVES to back off before submit
+    quantum_saturation_pct: int = 25
     seed: int = 0
 
 
@@ -75,9 +79,14 @@ class Lighthouse:
         self._last_beat: dict[str, float] = {}
         self._cache: list = []
         self.crashed = False
+        # fault injection: a stale lighthouse keeps serving but its
+        # telemetry intake is frozen — reports drop, readers see the
+        # last published counters (FaultPlan kind "telemetry_stale")
+        self.stale = False
         self.discovery_queries = 0
         self._pool_stats: dict[str, dict] = {}
         self._migration_stats: dict[str, dict] = {}
+        self._saturation = 0.0       # engine-published overload level
         hook = getattr(registry, "add_teardown_hook", None)
         if hook is not None:
             hook(self.detach)
@@ -115,8 +124,32 @@ class Lighthouse:
         prefilled, and ``prefix_tokens_skipped``, prompt FLOPs avoided via
         prefix sharing) with a heartbeat timestamp; ``pool_telemetry()``
         is the mesh-wide view the dashboards/benchmarks read."""
+        if self.stale:
+            return
         if island_id in self.registry:
             self._pool_stats[island_id] = dict(stats, reported_at=self.clock)
+
+    def report_saturation(self, level: float):
+        """Publish the engine's mesh overload level (0..1 fraction of
+        the configured shed watermark — 1.0 means the engine is
+        shedding). The raw value is operator-view; tenants read it only
+        through ``mesh_saturation(viewer_tier=...)``, hardened."""
+        if not self.stale:
+            self._saturation = max(0.0, float(level))
+
+    def mesh_saturation(self, viewer_tier: int | None = None) -> int:
+        """Mesh saturation as an integer percent. Raw for the operator
+        (``viewer_tier=None``); scoped viewers get it quantized UP to
+        ``quantum_saturation_pct`` with value-keyed noise — the same
+        ``harden_value`` transform as every other tenant-facing value,
+        so the backpressure hint WAVES backs off on (never understated,
+        can trip early) carries no sub-quantum load information."""
+        pct = int(round(self._saturation * 100))
+        if viewer_tier is None or not self.telemetry_policy.tier_scoped:
+            return pct
+        return self._report_value(
+            "mesh_saturation", pct,
+            self.telemetry_policy.quantum_saturation_pct, viewer_tier)
 
     def _report_value(self, metric: str, value: int, quantum: int,
                       viewer_tier: int) -> int:
@@ -186,6 +219,8 @@ class Lighthouse:
         same-tier prefix re-attach hits on import). The per-island dicts
         are cumulative; ``mesh_migration_stats()`` is the mesh-wide sum the
         churn benchmark gates on."""
+        if self.stale:
+            return
         if island_id in self.registry:
             self._migration_stats[island_id] = dict(stats,
                                                     reported_at=self.clock)

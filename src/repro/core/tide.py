@@ -53,6 +53,12 @@ PREFILL_BACKLOG_TOKENS_PER_UNIT = 64.0
 # drained island's load across destinations instead of dogpiling the first.
 MIGRATION_TOKENS_PER_UNIT = 128.0
 
+# Inflight work units one SLO expiry charges the island it died on
+# (note_expiry): expiring requests mean the island is not keeping up, so
+# routing's queueing-latency term steers new work away until the charge
+# decays — saturated islands stop attracting the work they cannot finish.
+EXPIRY_PENALTY_UNITS = 1.0
+
 
 @dataclass
 class LoadState:
@@ -69,7 +75,8 @@ class LoadState:
 class TIDE:
     def __init__(self, registry, buffer: str = "moderate",
                  crashed: bool = False, decay_s: float = 2.0,
-                 monitor_interval_s: float = 1.0):
+                 monitor_interval_s: float = 1.0,
+                 straggler_patience: int | None = None):
         self.registry = registry
         self.buffer = buffer
         self.crashed = crashed
@@ -77,6 +84,14 @@ class TIDE:
         self.monitor_interval_s = monitor_interval_s  # paper: 1s sampling
         self.state: dict[str, LoadState] = {}
         self.clock: float = 0.0
+        # straggler detection (opt-in): consecutive busy-but-zero-work
+        # ticks raise an island's slow score, progress pays it down;
+        # score >= patience flags the island (no admission, hedged by
+        # the engine), score back to 0 unflags it. None disables —
+        # report_progress becomes a no-op, nothing is ever flagged.
+        self.straggler_patience = straggler_patience
+        self._slow_score: dict[str, int] = {}
+        self._stragglers: set = set()
         hook = getattr(registry, "add_teardown_hook", None)
         if hook is not None:
             hook(self.detach)
@@ -90,6 +105,8 @@ class TIDE:
         deregistered island must not keep decaying phantom load or stale
         hysteresis that would resurface if the id is ever reused."""
         self.state.pop(island_id, None)
+        self._slow_score.pop(island_id, None)
+        self._stragglers.discard(island_id)
 
     def advance(self, dt: float):
         """Advance the virtual clock; load decays exponentially."""
@@ -121,7 +138,7 @@ class TIDE:
         crashed LIGHTHOUSE serves a stale cached island list."""
         if self.crashed:
             return 0.0
-        if not self._active(island_id):
+        if not self._active(island_id) or island_id in self._stragglers:
             return 0.0
         island = self.registry.get(island_id)
         if island.unbounded:
@@ -140,7 +157,8 @@ class TIDE:
         observers (the span tracer's per-tick capacity snapshot).
         ``capacity`` itself mutates exhaustion-prediction state, so an
         observer calling it would perturb routing; this never may."""
-        if self.crashed or not self._active(island_id):
+        if self.crashed or not self._active(island_id) \
+                or island_id in self._stragglers:
             return 0.0
         island = self.registry.get(island_id)
         if island.unbounded:
@@ -167,9 +185,53 @@ class TIDE:
         status = getattr(self.registry, "status", None)
         return status is None or status(island_id) == STATUS_ACTIVE
 
+    # --------------------------------------------------- straggler flag
+    def report_progress(self, island_id: str, work_delta: int,
+                        busy: bool):
+        """Per-tick progress feedback from the engine: ``work_delta`` is
+        the island's work-clock advance this tick, ``busy`` whether it
+        held any work. A busy tick with zero progress raises the slow
+        score; any other tick pays one unit down — so an island slowed
+        to 1/k speed accrues ~(k-2)/k score per tick and flags, while a
+        healthy island (or one given an idle breather) drains back to
+        zero and unflags. Deterministic, and a no-op unless
+        ``straggler_patience`` is set."""
+        if self.straggler_patience is None:
+            return
+        score = self._slow_score.get(island_id, 0)
+        if busy and work_delta <= 0:
+            score += 1
+        else:
+            score = max(0, score - 1)
+        self._slow_score[island_id] = score
+        if score >= self.straggler_patience:
+            self._stragglers.add(island_id)
+        elif score == 0:
+            self._stragglers.discard(island_id)
+
+    def is_straggler(self, island_id: str) -> bool:
+        return island_id in self._stragglers
+
+    def note_expiry(self, island_id: str):
+        """SLO-expiry pressure feedback: charge the island a request
+        expired on ``EXPIRY_PENALTY_UNITS`` of queued work, inflating
+        its queueing-latency term so routing stops feeding an island
+        that is blowing deadlines. Decays with the virtual clock like
+        every other load signal."""
+        if island_id not in self.registry:
+            return
+        island = self.registry.get(island_id)
+        if island.unbounded:
+            return
+        st = self._st(island_id)
+        st.inflight += EXPIRY_PENALTY_UNITS \
+            / max(island.capacity_units, 1e-6)
+
     def admits(self, island_id: str, priority: str = "secondary") -> bool:
         if not self._active(island_id):
             return False         # draining/failed: no new work, any priority
+        if island_id in self._stragglers:
+            return False         # flagged straggler: hedge, don't feed
         island = self.registry.get(island_id)
         if island.unbounded:
             return True

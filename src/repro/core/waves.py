@@ -20,6 +20,11 @@ from typing import Optional
 
 from repro.core.islands import TIER_PERSONAL, TIER_CLOUD
 from repro.core.placeholder import PlaceholderStore
+# the shared terminal-failure vocabulary (a str-enum: every historical
+# string comparison against these reasons still holds). repro.serving is
+# a namespace package and degrade has no repro imports, so this cannot
+# cycle back into core.
+from repro.serving.degrade import RejectReason
 
 
 @dataclass
@@ -154,7 +159,7 @@ class WAVES:
     # ------------------------------------------------------------ routing
     def route(self, req: Request) -> Decision:
         if not self._limiter.allow(req.user, self.tide.clock):
-            return Decision(None, False, "rate_limited", -1.0)
+            return Decision(None, False, RejectReason.RATE_LIMITED, -1.0)
         rep = self.mist.analyze(req.query)
         s_r = (req.sensitivity_override
                if req.sensitivity_override is not None else rep.score)
@@ -176,7 +181,7 @@ class WAVES:
                     best = min(local,
                                key=lambda i: self.composite_score(i, req))
                     return self._finish(req, best, s_r, "queued_local")
-            return Decision(None, False, "infeasible", s_r,
+            return Decision(None, False, RejectReason.INFEASIBLE, s_r,
                             scores={"rejects": rejects})
 
         if self.policy.mode == "constraint":

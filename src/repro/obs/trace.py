@@ -14,13 +14,14 @@ Event kinds, by scope:
   ``thaw_queue``, ``admit``, ``prefill`` (one per chunk-run dispatch,
   ``tokens`` = work dispatched), ``first_token``, ``decode`` (one per
   fused decode dispatch, ``rids`` = slots that advanced one token),
-  ``preempt``, ``freeze``, ``finish``, ``exec_reject``, and the KV-pool
+  ``preempt``, ``freeze``, ``finish``, ``exec_reject``, ``expire``
+  (work-clock SLO budget blown mid-execution), and the KV-pool
   events ``page_alloc`` / ``page_cow`` / ``page_share``;
 * orchestrator scope (``island=None``): ``submit``, ``route_tick``
   (per-island TIDE capacity snapshot), ``route`` (chosen island +
   score), ``dispatch`` / ``dispatch_sim``, ``migrate_out`` /
   ``migrate_in`` / ``migrate_return``, ``failover``, ``restart``,
-  ``complete``, ``reject``.
+  ``complete``, ``reject``, ``expire``.
 
 **Trust boundary.** The raw event stream is operator-view only — the
 same boundary as the Lighthouse's ``viewer_tier=None`` telemetry: it
@@ -35,9 +36,9 @@ Self-validation (the CI gates ride these):
 * ``work_by_island`` — per-request dispatched work, per island; its sum
   must equal each batcher's ``work_clock`` (span conservation: every
   work-clock unit is attributed to exactly one request);
-* ``terminal_counts`` — orchestrator-level ``complete``/``reject``
-  events per rid; exactly one per submitted request, even across the
-  drain/kill churn scenarios.
+* ``terminal_counts`` — orchestrator-level ``complete``/``reject``/
+  ``expire`` events per rid; exactly one per submitted request, even
+  across the drain/kill churn scenarios.
 """
 from __future__ import annotations
 
@@ -59,7 +60,7 @@ class TraceEvent:
 
 
 # orchestrator-scope kinds that resolve a request exactly once
-TERMINAL_KINDS = ("complete", "reject")
+TERMINAL_KINDS = ("complete", "reject", "expire")
 
 
 class Tracer:

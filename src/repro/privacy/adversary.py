@@ -51,6 +51,7 @@ class Mitigations:
     tier_scoped_telemetry: bool = False   # lighthouse scoped view
     noised_telemetry: bool = False        # quantize + value-keyed noise
     constant_shape: bool = False          # fixed-geometry dispatch
+    tier_quotas: bool = False             # per-tier scheduling quotas
 
     @classmethod
     def off(cls) -> "Mitigations":
@@ -59,7 +60,7 @@ class Mitigations:
     @classmethod
     def on(cls) -> "Mitigations":
         return cls(tier_scoped_telemetry=True, noised_telemetry=True,
-                   constant_shape=True)
+                   constant_shape=True, tier_quotas=True)
 
 
 @dataclass(frozen=True)
@@ -400,5 +401,39 @@ def run_attack_suite(cfg, params, mitigations: Mitigations,
         acc = run_protocol(2, trial, {"f": per_island},
                            cal_per_class, test_per_class)["f"]
         record("island_routing", "routing", 2, *acc)
+
+    # ---- 7. scheduling interference: how much co-tenant work shares the
+    # batcher, read from the adversary's OWN probe timing alone (TTFT +
+    # completion tick). With a shared rotating-RR prefill budget and
+    # first-come slot allocation, heavy tier-1 traffic delays the tier-3
+    # probe; per-tier quotas reserve the probe's slots and sub-budget, so
+    # its schedule is invariant to the victims' load (the PR-7 residual).
+    if sel("scheduling_interference"):
+        sched_classes = ((1, 15), (3, 119))   # (n victims, prompt chars)
+
+        def trial(c):
+            b = make_batcher(
+                cfg, cache="paged", num_slots=6, max_len=160,
+                params=params, prefill_token_budget=32,
+                constant_shape=mitigations.constant_shape,
+                tier_quotas={1: 3, ATTACKER_TIER: 3}
+                if mitigations.tier_quotas else None)
+            if tracer is not None:
+                b.attach_tracer(tracer, island="sched-island")
+            n_vic, chars = sched_classes[c]
+            for k in range(n_vic):
+                b.submit(_victim_prompt(trial.n * 8 + k, chars),
+                         max_new_tokens=4, trust_tier=1)
+            probe = b.submit(f"adv probe {trial.n:03d}",
+                             max_new_tokens=3, trust_tier=ATTACKER_TIER)
+            trial.n += 1
+            b.run_until_done()
+            rec = b.request_log[probe]
+            return (rec.get("ttft_ticks", 0), rec.get("done_tick", 0))
+        trial.n = 0
+
+        acc = run_protocol(2, trial, {"f": lambda o: o},
+                           cal_per_class, test_per_class)["f"]
+        record("scheduling_interference", "scheduling", 2, *acc)
 
     return results

@@ -20,6 +20,7 @@ CHANNEL_WEIGHTS = {
     "peak_pages": 0.20,
     "dispatch_shape": 0.15,
     "backlog": 0.15,
+    "scheduling": 0.15,
     "work_clock": 0.10,
     "routing": 0.10,
 }

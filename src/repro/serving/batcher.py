@@ -178,6 +178,10 @@ class _BatcherBase:
         self.tracer = None
         self.island = ""
         self.profiler = None
+        # fault injection: work-clock multiplier (1 = full speed); a
+        # slowed batcher does real work only every ``slowdown``-th tick
+        self.slowdown = 1
+        self._slow_phase = 0
 
     def attach_tracer(self, tracer, island: str = ""):
         """Attach a span tracer; ``island`` labels this batcher's events.
@@ -275,6 +279,51 @@ class _BatcherBase:
                 return self._freeze_slot(si)
         return None
 
+    # ---------------------------------------------------------- expiry
+    def cancel_request(self, rid: int) -> bool:
+        """Terminally cancel a request at any lifecycle stage (SLO
+        expiry): a queued request lifts out of the queue, an in-slot
+        request (mid-prefill or mid-decode) releases its cache state via
+        the manager-specific ``_cancel_slot``. Partial output is
+        discarded and ``finished`` is NOT written — the caller (the
+        orchestrator's expiry sweep) owns the terminal record. Returns
+        False when the rid is unknown or already finished, so a request
+        that completed in the same tick its deadline lapsed is delivered
+        normally, never double-resolved."""
+        for i, (qrid, _p, _mn, tier) in enumerate(self.queue):
+            if qrid != rid:
+                continue
+            self.queue.pop(i)
+            self._tickets.pop(rid, None)
+            getattr(self, "_enc_len", {}).pop(rid, None)
+            self._note_terminal(rid, "expired", tier=tier)
+            return True
+        for si, s in enumerate(self.slots):
+            if s.active and s.request_id == rid:
+                self._cancel_slot(si)
+                return True
+        return False
+
+    def _cancel_slot(self, si):
+        """Release slot ``si`` without finishing it (stacked manager:
+        the dense row is overwritten at the next admission, nothing to
+        free)."""
+        s = self.slots[si]
+        self._note_terminal(s.request_id, "expired",
+                            tokens=len(s.carried) + len(s.generated),
+                            tier=s.tier)
+        self.slots[si] = SlotState()
+
+    # --------------------------------------------------- fault injection
+    def set_slowdown(self, factor: int):
+        """Deterministic straggler injection: a work-clock multiplier.
+        With factor k, only every k-th ``tick()`` does real work — the
+        tick clock still advances every call, so each unit of work takes
+        k ticks. Streams stay bit-exact (skipped ticks do nothing at
+        all); factor 1 restores full speed."""
+        self.slowdown = max(1, int(factor))
+        self._slow_phase = 0
+
     def _resume_fields(self, s: SlotState) -> dict:
         """Ticket fields shared by both cache managers' ``_freeze_slot``:
         un-fold the recompute context back into (original prompt, full
@@ -331,8 +380,9 @@ class _BatcherBase:
             self._trace("first_token", rid=rid)
 
     def _note_terminal(self, rid, outcome, tokens=0, tier=None):
-        """Stamp a request's terminal record: ``outcome`` is "completed"
-        or "rejected" (executor-level: could never fit). Exactly one
+        """Stamp a request's terminal record: ``outcome`` is "completed",
+        "rejected" (executor-level: could never fit) or "expired"
+        (work-clock SLO budget blown — ``cancel_request``). Exactly one
         terminal note per batcher-local rid."""
         rec = self.request_log.get(rid)
         if rec is not None:
@@ -341,9 +391,9 @@ class _BatcherBase:
             rec["outcome"] = outcome
             rec["generated_tokens"] = tokens
         if self.tracer is not None:
-            self._trace("finish" if outcome == "completed"
-                        else "exec_reject", rid=rid, tokens=tokens,
-                        tier=tier)
+            kind = {"completed": "finish",
+                    "expired": "expire"}.get(outcome, "exec_reject")
+            self._trace(kind, rid=rid, tokens=tokens, tier=tier)
 
     def busy(self) -> bool:
         return bool(self.queue) or any(s.active for s in self.slots)
@@ -352,6 +402,14 @@ class _BatcherBase:
         """One engine tick; ``tick_dispatches_max`` records the peak
         number of model dispatches any single tick issued — the
         deterministic wall-clock proxy the serving benchmark gates on."""
+        if self.slowdown > 1:
+            # straggler injection: the tick clock advances, the work
+            # clock stands still — every unit of work takes ``slowdown``
+            # ticks, which is exactly what TIDE's straggler detector sees
+            self._slow_phase = (self._slow_phase + 1) % self.slowdown
+            if self._slow_phase != 1:
+                self.stats["ticks"] += 1
+                return
         d0 = self.stats["device_dispatches"]
         prof = self.profiler
         if prof is None:
@@ -603,7 +661,7 @@ class PagedContinuousBatcher(_BatcherBase):
                  seed=0, dtype="float32", temperature=0.0, page_size=16,
                  num_pages=None, sharing=True, prefill="chunked",
                  prefill_token_budget=None, fused=True,
-                 constant_shape=False):
+                 constant_shape=False, tier_quotas=None):
         if not paged_supported(cfg):
             raise ValueError(
                 f"paged KV cache requires a full-history attention-only "
@@ -616,6 +674,16 @@ class PagedContinuousBatcher(_BatcherBase):
             raise ValueError(
                 "constant_shape requires the fused chunked-prefill path "
                 "(fused=True, prefill='chunked')")
+        if tier_quotas:
+            if prefill != "chunked":
+                raise ValueError(
+                    "tier_quotas require the chunked-prefill path "
+                    "(prefill='chunked')")
+            if any(c < 1 for c in tier_quotas.values()) \
+                    or sum(tier_quotas.values()) > num_slots:
+                raise ValueError(
+                    f"tier_quotas {tier_quotas} must be >=1 each and sum "
+                    f"to at most num_slots={num_slots}")
         super().__init__(cfg, params, num_slots, max_len, seed, dtype,
                          temperature)
         self.page_size = page_size
@@ -643,6 +711,18 @@ class PagedContinuousBatcher(_BatcherBase):
         # free pages spoken for by admitted-but-undispatched prefill chunks
         self.reserved = 0
         self._prefill_rr = 0     # rotating round-robin pointer (fairness)
+        # per-tier scheduling quotas (privacy hardening, opt-in): a
+        # listed tier owns exactly that many slots — no more (hard cap,
+        # even when others idle) and no fewer (admission reserves them)
+        # — and a proportional share of the prefill token budget;
+        # unlisted tiers share the leftover slots/budget. Deliberately
+        # NON-work-conserving: a tier's admission latency, prefill pace
+        # and decode slot count are then independent of every other
+        # tier's workload — the scheduling-interference channel the
+        # seventh adversary attack measures. None (default) keeps the
+        # shared-RR scheduler bit-identical to before.
+        self.tier_quotas = dict(tier_quotas) if tier_quotas else None
+        self._rr_by_class: dict = {}   # quota class -> rotating pointer
         self._enc_len: dict[int, int] = {}   # backlog length memo (by rid)
         self.blocked_last_tick = 0
         # fused tick: every chunk run of a tick batches into ONE prefill
@@ -741,10 +821,12 @@ class PagedContinuousBatcher(_BatcherBase):
 
     # ---------------------------------------------------------- admission
     def _admit(self):
-        if self.prefill_mode == "chunked":
-            self._admit_chunked()
-        else:
+        if self.prefill_mode != "chunked":
             self._admit_full()
+        elif self.tier_quotas:
+            self._admit_chunked_quota()
+        else:
+            self._admit_chunked()
 
     def _admit_full(self):
         """Monolithic admission (the pre-chunking baseline): one blocking
@@ -883,6 +965,96 @@ class PagedContinuousBatcher(_BatcherBase):
             self.queue.pop(0)
             self._tickets.pop(rid, None)
             self._enc_len.pop(rid, None)
+
+    # ------------------------------------------------- per-tier quotas
+    def _quota_admits(self, tier) -> bool:
+        """Whether a request of ``tier`` may take a slot right now: a
+        listed tier uses at most its cap; unlisted tiers share the slots
+        no quota reserves. Hard caps both ways — a listed tier can never
+        be crowded out of its reserved slots, and can never spill beyond
+        them — so one tier's occupancy is invisible to another's
+        admission latency."""
+        caps = self.tier_quotas
+        if tier in caps:
+            used = sum(1 for s in self.slots
+                       if s.active and s.tier == tier)
+            return used < caps[tier]
+        used = sum(1 for s in self.slots
+                   if s.active and s.tier not in caps)
+        return used < self.num_slots - sum(caps.values())
+
+    def _admit_chunked_quota(self):
+        """Quota-aware chunked admission: same plan-only admission as
+        ``_admit_chunked``, but the queue is SCANNED — a head-of-line
+        request whose tier is at its cap is skipped, not waited on — so
+        one tier's backlog cannot delay another tier's admission (the
+        head-of-line interference channel the shared queue leaks)."""
+        for si, s in enumerate(self.slots):
+            if s.active:
+                continue
+            qi = next((i for i, (_r, _p, _mn, t) in enumerate(self.queue)
+                       if self._quota_admits(t)), None)
+            if qi is None:
+                break            # empty queue, or every queued tier capped
+            rid, prompt, max_new, tier = self.queue[qi]
+            ticket = self._tickets.get(rid)
+            if ticket is not None:
+                status = self._admit_ticket(si, rid, ticket)
+            else:
+                ids = self._encode(prompt, max_new)
+                status = self._admit_ids(si, rid, ids, max_new, tier,
+                                         prompt)
+            if status == "blocked":
+                self.pool.stats["blocked"] += 1
+                self.blocked_last_tick += 1
+                break
+            self.queue.pop(qi)
+            self._tickets.pop(rid, None)
+            self._enc_len.pop(rid, None)
+
+    def _prefill_tick_quota(self):
+        """Quota-aware budgeted prefill: the token budget splits into
+        per-class shares — each listed tier gets ``budget * cap /
+        num_slots`` (its slot share), unlisted tiers split the remainder
+        — and each class runs its own rotating round-robin over its own
+        slots. A class that exhausts its share stops; nobody inherits
+        leftover budget (non-work-conserving on purpose: a tier's
+        prefill pace must not depend on whether other tiers had work).
+        All planned rows still fuse into ONE device dispatch."""
+        caps = self.tier_quotas
+        total = self.prefill_token_budget
+        shares = {t: total * c // self.num_slots for t, c in caps.items()}
+        shares[None] = total - sum(shares.values())   # unlisted tiers
+        rows = []
+        n = self.num_slots
+        for key, budget in shares.items():
+            start = self._rr_by_class.get(key, 0)
+            progress = True
+            while budget > 0 and progress:
+                progress = False
+                for k in range(n):
+                    if budget <= 0:
+                        break
+                    si = (start + k) % n
+                    s = self.slots[si]
+                    if not (s.active and s.next_chunk < len(s.chunks)):
+                        continue
+                    if (s.tier != key) if key is not None \
+                            else (s.tier in caps):
+                        continue
+                    if self.fused:
+                        row, gtok = self._plan_prefill_row(si, budget)
+                        if row is not None:
+                            rows.append(row)
+                        budget -= gtok
+                    else:
+                        budget -= self._advance_prefill(si, budget)
+                    self._rr_by_class[key] = (si + 1) % n
+                    progress = True
+                if self.constant_shape:
+                    break        # one pass max (see _prefill_tick)
+        if rows:
+            self._execute_prefill_rows(rows)
 
     def _admit_ids(self, si, rid, ids, max_new, tier, prompt,
                    carried=(), pending=()):
@@ -1318,6 +1490,24 @@ class PagedContinuousBatcher(_BatcherBase):
         self.slots[si] = SlotState()
         return t
 
+    def _cancel_slot(self, si):
+        """Release slot ``si`` without finishing it (SLO expiry): free
+        its pages, return the reservations its undispatched chunks hold,
+        clear the block table. The device-resident token tail is
+        discarded unmaterialized — nobody will read it, and idle rows
+        decode against the scratch page anyway."""
+        s = self.slots[si]
+        self.reserved -= sum(1 for (j, _h, _f) in s.chunks[s.next_chunk:]
+                             if j >= len(s.pages))
+        for pid in s.pages:
+            self.pool.decref(pid)
+        self.block_tables[si] = 0
+        self._note_terminal(
+            s.request_id, "expired",
+            tokens=len(s.carried) + len(s.generated) + s.gen_dev,
+            tier=s.tier)
+        self.slots[si] = SlotState()
+
     def prefill_backlog_tokens(self) -> int:
         """Prompt tokens admitted or queued but not yet prefilled — the
         head-of-line signal TIDE folds into the island's queueing-latency
@@ -1417,7 +1607,10 @@ class PagedContinuousBatcher(_BatcherBase):
         self._admit()
         self.stats["ticks"] += 1
         if self.prefill_mode == "chunked":
-            self._prefill_tick()
+            if self.tier_quotas:
+                self._prefill_tick_quota()
+            else:
+                self._prefill_tick()
         active = [si for si, s in enumerate(self.slots)
                   if s.active and s.next_chunk >= len(s.chunks)]
         if not active:
@@ -1621,7 +1814,8 @@ def make_batcher(cfg, cache: str = "auto", **kw):
         return PagedContinuousBatcher(cfg, **kw)
     if cache == "stacked":
         for k in ("page_size", "num_pages", "sharing", "prefill",
-                  "prefill_token_budget", "fused", "constant_shape"):
+                  "prefill_token_budget", "fused", "constant_shape",
+                  "tier_quotas"):
             kw.pop(k, None)
         return ContinuousBatcher(cfg, **kw)
     raise ValueError(f"unknown cache manager {cache!r}")

@@ -44,8 +44,25 @@ from repro.data.tokenizer import ByteTokenizer
 from repro.models.model import get_model
 from repro.models.steps import make_prefill_step, make_serve_step
 from repro.obs.metrics import latency_summary
+from repro.serving.degrade import (SLO_WORK_PER_MS, OverloadPolicy,
+                                   RejectReason)
 from repro.serving.kvpool import trust_tier_for_sensitivity
 from repro.serving.migration import MigrationTicket, ticket_fits
+
+# Capped exponential backoff for failed migration placements: the first
+# failure waits BASE ticks before the request may freeze-and-retry, each
+# further failure doubles the wait up to CAP. (Previously a failed
+# placement either retried every tick — page churn — or pinned forever;
+# a routable-set change still clears all backoffs immediately, so a
+# recovering mesh retries without waiting out the delay.)
+BACKOFF_BASE_TICKS = 16
+BACKOFF_CAP_TICKS = 256
+
+# Trust tier through which the engine reads the Lighthouse's hardened
+# mesh-saturation hint for submit-time backpressure: the least-trusted
+# view, so admission control never sees sharper load data than any
+# tenant could.
+BACKPRESSURE_VIEWER_TIER = 3
 
 
 @dataclass
@@ -216,6 +233,11 @@ class PendingRequest:
     # can finish it if no destination will take it)
     ticket: Optional[MigrationTicket] = None
     decision: Optional[Decision] = None
+    # SLO budget: the monotonic mesh work-clock reading past which this
+    # request expires (inf = no deadline). Set once at submit from
+    # deadline_ms * SLO_WORK_PER_MS and carried through freezes and
+    # migrations — the budget belongs to the request, not its placement.
+    deadline_work: float = math.inf
 
 
 class TickOrchestrator:
@@ -247,7 +269,8 @@ class TickOrchestrator:
 
     def __init__(self, waves, registry, batchers=None, seed=0,
                  decode_ticks_per_tick=4, tick_interval_s=0.05,
-                 migration_token_budget=512, tracer=None):
+                 migration_token_budget=512, tracer=None,
+                 overload=None, debug_audit=False):
         self.waves = waves
         self.registry = registry
         self.batchers = batchers or {}
@@ -276,12 +299,26 @@ class TickOrchestrator:
         self._util_sum: dict[str, float] = {}
         self._util_n: dict[str, int] = {}
         self._draining: dict[str, bool] = {}     # island -> dereg on empty
-        # (island, brid) pairs a drain already tried and failed to place:
-        # they finish at the source and are not re-frozen every tick (the
-        # pin set clears whenever the routable-island set changes, so a
-        # recovering mesh retries them)
-        self._unmovable: set = set()
+        # failed-placement backoff: rid -> (attempts, retry_at_tick).
+        # A request nobody would take finishes at its source and is not
+        # re-frozen until the capped-exponential delay elapses (or the
+        # routable-island set changes, which clears every backoff so a
+        # recovering mesh retries immediately).
+        self._placement_backoff: dict[int, tuple] = {}
         self._last_routable: tuple = ()
+        # overload ladder (load shedding + submit backpressure); the
+        # default policy disables every watermark — no behavior change
+        self.overload = overload or OverloadPolicy()
+        # end-of-tick PagePool.audit() on every paged batcher: invariant
+        # violations surface at the tick that caused them (debug /
+        # fault-injection runs; costs a pool scan per island per tick)
+        self.debug_audit = debug_audit
+        # monotonic mesh work clock: per-island work_clock deltas
+        # accumulated across churn (an island failure drops its batcher
+        # clock; this counter never goes backwards) — the clock SLO
+        # deadlines are enforced against
+        self.mesh_work = 0
+        self._work_seen: dict[str, int] = {}
         self.tick_stats = {"ticks": 0, "route_calls": 0, "routed": 0,
                            "decode_ticks": 0, "pool_peak": 0,
                            "admissions": 0, "prefill_dispatches": 0,
@@ -289,7 +326,9 @@ class TickOrchestrator:
                            "migrations_started": 0, "migrations": 0,
                            "recomputes": 0, "pages_shipped": 0,
                            "restarts": 0, "failovers": 0,
-                           "migration_returns": 0, "islands_drained": 0}
+                           "migration_returns": 0, "islands_drained": 0,
+                           "expired": 0, "shed": 0, "hedges": 0,
+                           "backpressure_rejects": 0}
         hook = getattr(registry, "add_teardown_hook", None)
         if hook is not None:
             hook(self._on_island_deregistered)
@@ -314,16 +353,39 @@ class TickOrchestrator:
     # --------------------------------------------------------- submission
     def submit(self, req: Request, max_new_tokens=12) -> int:
         """Enqueue; returns a request id resolved in ``results`` once the
-        request completes (None if rejected)."""
+        request completes (None if rejected, shed, bounced by
+        backpressure, or expired)."""
         rid = self._next_rid
         self._next_rid += 1
-        self.pending.append(PendingRequest(rid, req, max_new_tokens,
-                                           self.waves.tide.clock))
-        self.tick_stats["pool_peak"] = max(self.tick_stats["pool_peak"],
-                                           len(self.pending))
+        p = PendingRequest(rid, req, max_new_tokens, self.waves.tide.clock)
+        if math.isfinite(req.deadline_ms):
+            # the deadline becomes a work-clock budget at admission — the
+            # only clock the deterministic benchmarks can gate on
+            p.deadline_work = self.mesh_work \
+                + req.deadline_ms * SLO_WORK_PER_MS
         if self.tracer is not None:
             self._otrace("submit", rid=rid, priority=req.priority,
                          max_new=max_new_tokens)
+        # submit-time backpressure: sheddable priorities bounce while the
+        # mesh-saturation hint (read through the LEAST-trusted telemetry
+        # view — admission control never sees sharper load data than any
+        # tenant could) sits at/above the policy threshold
+        pol = self.overload
+        if pol.backpressure_pct is not None \
+                and pol.shed_rank(req.priority) < len(pol.shed_priorities) \
+                and self.waves.lighthouse.mesh_saturation(
+                    viewer_tier=BACKPRESSURE_VIEWER_TIER) \
+                >= pol.backpressure_pct:
+            d = Decision(None, False, RejectReason.BACKPRESSURE, -1.0)
+            self.rejected.append(d)
+            self.results[rid] = None
+            self.tick_stats["backpressure_rejects"] += 1
+            self._otrace("reject", rid=rid,
+                         reason=str(RejectReason.BACKPRESSURE))
+            return rid
+        self.pending.append(p)
+        self.tick_stats["pool_peak"] = max(self.tick_stats["pool_peak"],
+                                           len(self.pending))
         return rid
 
     def submit_sync(self, req: Request, max_new_tokens=12,
@@ -364,6 +426,9 @@ class TickOrchestrator:
         self.registry.set_status(island_id, STATUS_FAILED)
         self._draining.pop(island_id, None)
         self.batchers.pop(island_id, None)
+        # a replacement batcher under the same id starts a fresh clock;
+        # the mesh work clock already holds everything this one did
+        self._work_seen.pop(island_id, None)
         self.waves.lighthouse.detach(island_id)
         n = 0
         for key in [k for k in self._local_inflight if k[0] == island_id]:
@@ -391,6 +456,7 @@ class TickOrchestrator:
         ``drain_island(deregister=True)`` arrives here already empty)."""
         self.batchers.pop(island_id, None)
         self._draining.pop(island_id, None)
+        self._work_seen.pop(island_id, None)
         self._util_sum.pop(island_id, None)
         self._util_n.pop(island_id, None)
         for key in [k for k in self._local_inflight if k[0] == island_id]:
@@ -401,18 +467,29 @@ class TickOrchestrator:
 
     def _return_to_source(self, p, t) -> bool:
         """Hand a frozen request back to its still-draining source to
-        finish there (no destination would or could take it). The pin in
-        ``_unmovable`` stops the next tick from freezing it again."""
+        finish there (no destination would or could take it). The capped
+        exponential backoff recorded here stops the next ticks from
+        freezing it again immediately — it retries after the delay, or as
+        soon as the routable-island set changes."""
         if t.source in self.batchers and p.decision is not None:
             p.ticket = None
             brid = self.batchers[t.source].submit_ticket(t)
             self._local_inflight[(t.source, brid)] = (p, p.decision)
-            self._unmovable.add((t.source, brid))
+            attempts = self._placement_backoff.get(p.rid, (0, 0))[0] + 1
+            delay = min(BACKOFF_BASE_TICKS << (attempts - 1),
+                        BACKOFF_CAP_TICKS)
+            self._placement_backoff[p.rid] = (
+                attempts, self.tick_stats["ticks"] + delay)
             self.tick_stats["migration_returns"] += 1
             self._otrace("migrate_return", rid=p.rid, island=t.source,
-                         brid=brid)
+                         brid=brid, attempts=attempts,
+                         backoff_ticks=delay)
             return True
         return False
+
+    def _backed_off(self, rid: int) -> bool:
+        ent = self._placement_backoff.get(rid)
+        return ent is not None and self.tick_stats["ticks"] < ent[1]
 
     @staticmethod
     def _ticket_fits(b, t) -> bool:
@@ -438,29 +515,36 @@ class TickOrchestrator:
 
     def _service_draining(self):
         """One tick's worth of drain progress: freeze in-flight requests
-        off draining islands (budgeted by context tokens) and requeue them
-        with their tickets so this tick's routing pass places them;
-        islands that have emptied finish draining (and deregister if so
-        requested)."""
+        off draining islands — and off TIDE-flagged stragglers (the
+        hedge: a slowed island's work moves to healthy islands via the
+        same ticket path a drain uses) — budgeted by context tokens, and
+        requeue them with their tickets so this tick's routing pass
+        places them; islands that have emptied finish draining (and
+        deregister if so requested)."""
         routable_fn = getattr(self.registry, "is_routable", None)
         routable = tuple(sorted(
             i.island_id for i in self.registry.all()
             if routable_fn is None or routable_fn(i.island_id)))
         if routable != self._last_routable:
             self._last_routable = routable
-            self._unmovable.clear()      # mesh changed: retry placements
+            self._placement_backoff.clear()  # mesh changed: retry now
         budget = self.migration_token_budget
-        for iid in list(self._draining):
+        tide = self.waves.tide
+        evacuating = list(self._draining) + [
+            iid for iid in self.batchers
+            if iid not in self._draining and tide.is_straggler(iid)]
+        for iid in evacuating:
+            hedging = iid not in self._draining
             b = self.batchers.get(iid)
             if b is not None:
                 for key in [k for k in self._local_inflight
                             if k[0] == iid]:
                     if budget <= 0:
                         break
-                    if key in self._unmovable:
-                        continue     # already failed to place: it
-                                     # finishes here, don't churn pages
                     p, d = self._local_inflight[key]
+                    if self._backed_off(p.rid):
+                        continue     # recently failed to place: it
+                                     # finishes here, don't churn pages
                     t = b.freeze_request(key[1])
                     if t is None:
                         continue      # already finished: delivered below
@@ -474,9 +558,11 @@ class TickOrchestrator:
                     # (partial KV) and still-queued (nothing yet) tickets
                     budget -= max(t.kv_tokens, len(t.generated), 1)
                     self.tick_stats["migrations_started"] += 1
+                    if hedging:
+                        self.tick_stats["hedges"] += 1
                     self._otrace("migrate_out", rid=p.rid, island=iid,
                                  brid=key[1], kv_tokens=t.kv_tokens,
-                                 phase=t.phase)
+                                 phase=t.phase, hedge=hedging)
 
     def _finalize_drains(self):
         """End-of-tick drain completion check (after deliveries, so the
@@ -500,6 +586,114 @@ class TickOrchestrator:
                 self.tick_stats["islands_drained"] += 1
                 if dereg:
                     self.registry.deregister(iid)
+
+    # ----------------------------------------------- degradation ladder
+    def _advance_mesh_work(self):
+        """Fold each live batcher's work-clock advance into the monotonic
+        mesh work clock (an island failure drops its batcher clock — the
+        per-island last-seen map makes the mesh clock never go
+        backwards). This is the clock SLO deadlines expire against."""
+        for iid, b in self.batchers.items():
+            delta = b.work_clock - self._work_seen.get(iid, 0)
+            if delta > 0:
+                self.mesh_work += delta
+            self._work_seen[iid] = b.work_clock
+
+    def _expire(self, p, stage: str, island: str | None = None):
+        """Terminal a request whose work-clock budget is spent: typed
+        reject, TIDE expiry-pressure feedback on the island it died on,
+        and the distinct ``expire`` trace terminal (so
+        ``terminals_exactly_once`` covers SLO expiry like any other
+        outcome)."""
+        self.rejected.append(Decision(None, False, RejectReason.EXPIRED,
+                                      -1.0))
+        self.results[p.rid] = None
+        self._placement_backoff.pop(p.rid, None)
+        self.tick_stats["expired"] += 1
+        if island is not None:
+            self.waves.tide.note_expiry(island)
+        self._otrace("expire", rid=p.rid, stage=stage, island=island)
+
+    def _expire_requests(self):
+        """Expire every request whose deadline_work the mesh work clock
+        has passed — queued, frozen mid-migration, decoding on an island,
+        or simulated. A request that FINISHED this tick (sitting in
+        ``b.finished``) is delivered normally: completion and expiry are
+        mutually exclusive terminals."""
+        now = self.mesh_work
+        keep = []
+        for p in self.pending:
+            if p.deadline_work <= now and p.rid not in self.results:
+                self._expire(p, "frozen" if p.ticket is not None
+                             else "queued",
+                             island=(p.ticket.source
+                                     if p.ticket is not None else None))
+            else:
+                keep.append(p)
+        self.pending = keep
+        for key in [k for k, (p, _d) in self._local_inflight.items()
+                    if p.deadline_work <= now]:
+            iid, brid = key
+            b = self.batchers.get(iid)
+            if b is not None and brid in b.finished:
+                continue          # completed this tick: deliver, not expire
+            p, _d = self._local_inflight.pop(key)
+            if b is not None:
+                b.cancel_request(brid)
+            self._expire(p, "inflight", island=iid)
+        still = []
+        for item in self._sim_inflight:
+            _ready, p, d, _text, _exec_ms = item
+            if p.deadline_work <= now:
+                self._expire(p, "sim", island=d.island.island_id)
+            else:
+                still.append(item)
+        self._sim_inflight = still
+
+    def _shed_overload(self):
+        """Watermark-driven load shedding: saturation is the worst ratio
+        of (pending pool, mesh prefill backlog, max pool occupancy) to
+        its configured watermark. The level is published to LIGHTHOUSE
+        every tick (hardened for tenant viewers — the backpressure hint);
+        at/above 1.0 the newest lowest-priority sheddable pending
+        requests are dropped with the typed ``shed`` reason until the
+        pool is back at the queue watermark."""
+        pol = self.overload
+        if not pol.enabled():
+            return
+        sat = 0.0
+        if pol.queue_watermark:
+            sat = max(sat, len(self.pending) / pol.queue_watermark)
+        if pol.backlog_watermark:
+            sat = max(sat, self.waves.lighthouse.mesh_prefill_backlog()
+                      / pol.backlog_watermark)
+        if pol.occupancy_watermark:
+            occs = [b.pool.occupancy() for b in self.batchers.values()
+                    if getattr(b, "pool", None) is not None]
+            if occs:
+                sat = max(sat, max(occs) / pol.occupancy_watermark)
+        self.waves.lighthouse.report_saturation(min(sat, 1.0))
+        if sat < 1.0:
+            return
+        target = pol.queue_watermark or 0
+        sheddable = sorted(
+            (p for p in self.pending
+             if p.ticket is None
+             and pol.shed_rank(p.req.priority) < len(pol.shed_priorities)),
+            key=lambda p: (pol.shed_rank(p.req.priority), -p.rid))
+        drop = set()
+        for p in sheddable:
+            if len(self.pending) - len(drop) <= target:
+                break
+            drop.add(p.rid)
+            self.rejected.append(Decision(None, False, RejectReason.SHED,
+                                          -1.0))
+            self.results[p.rid] = None
+            self.tick_stats["shed"] += 1
+            self._otrace("reject", rid=p.rid,
+                         reason=str(RejectReason.SHED))
+        if drop:
+            self.pending = [p for p in self.pending if p.rid not in drop]
 
     # ------------------------------------------------------------ routing
     def route_pool(self, reqs: list) -> list:
@@ -534,6 +728,13 @@ class TickOrchestrator:
         routable = getattr(self.registry, "is_routable", None)
         if routable is not None:
             islands = [i for i in islands if routable(i.island_id)]
+        # TIDE-flagged stragglers take no new work while flagged (the
+        # scalar path rejects them via TIDE.admits); if EVERY island is
+        # flagged, keep them all — degraded service beats none
+        ok = [i for i in islands
+              if not waves.tide.is_straggler(i.island_id)]
+        if ok:
+            islands = ok
         if not live:
             return decisions
         if not islands:
@@ -621,7 +822,12 @@ class TickOrchestrator:
         """One scheduling tick; returns the Responses completed in it."""
         waves = self.waves
         completed: list[Response] = []
+        self._advance_mesh_work()
         self._service_draining()
+        # degradation ladder, in order: expire blown SLO budgets, then
+        # shed overload, then route what remains
+        self._expire_requests()
+        self._shed_overload()
         pool, self.pending = self.pending, []
         if pool:
             if self.tracer is not None:
@@ -643,9 +849,11 @@ class TickOrchestrator:
                         continue
                     self.rejected.append(d)
                     self.results[p.rid] = None
+                    self._placement_backoff.pop(p.rid, None)
                     self._otrace("reject", rid=p.rid, reason=d.reason)
                     continue
                 self.tick_stats["routed"] += 1
+                self._placement_backoff.pop(p.rid, None)
                 island = d.island
                 self._otrace("route", rid=p.rid,
                              island=island.island_id,
@@ -779,6 +987,13 @@ class TickOrchestrator:
             mig = getattr(b, "migration_stats", None)
             if mig is not None and any(mig.values()):
                 waves.lighthouse.report_migration(iid, mig)
+        # per-island progress feedback for straggler detection (delta
+        # against the last-seen clock BEFORE _advance_mesh_work folds it
+        # into the mesh clock below)
+        for iid, b in self.batchers.items():
+            waves.tide.report_progress(
+                iid, b.work_clock - self._work_seen.get(iid, 0), b.busy())
+        self._advance_mesh_work()
         # admission vs prefill-dispatch counts (chunked prefill makes the
         # two diverge: one admission may dispatch many chunks — or none)
         self.tick_stats["admissions"] = sum(
@@ -823,6 +1038,18 @@ class TickOrchestrator:
                 still.append((ready, p, d, text, exec_ms))
         self._sim_inflight = still
         self._finalize_drains()
+        if self.debug_audit:
+            # end-of-tick page-pool invariant check: refcount-vs-table
+            # violations surface at the tick that caused them
+            for iid, b in self.batchers.items():
+                kv_pool = getattr(b, "pool", None)
+                if kv_pool is not None:
+                    try:
+                        kv_pool.audit()
+                    except AssertionError as e:
+                        raise AssertionError(
+                            f"PagePool audit failed on {iid} at tick "
+                            f"{self.tick_stats['ticks']}: {e}") from e
         self.tick_stats["ticks"] += 1
         return completed
 
@@ -887,7 +1114,7 @@ def build_island_batchers(cfg, registry, cache="auto", params=None,
                           page_size=16, pool_headroom=1.0, seed=0,
                           temperature=0.0, prefill="chunked",
                           prefill_token_budget=None, fused=True,
-                          constant_shape=False):
+                          constant_shape=False, tier_quotas=None):
     """Per-SHORE-island continuous batchers with KV pools sized from each
     island's declared ``capacity_units``.
 
@@ -916,7 +1143,7 @@ def build_island_batchers(cfg, registry, cache="auto", params=None,
             max_len=max_len, seed=seed, temperature=temperature,
             page_size=page_size, prefill=prefill,
             prefill_token_budget=prefill_token_budget, fused=fused,
-            constant_shape=constant_shape,
+            constant_shape=constant_shape, tier_quotas=tier_quotas,
             num_pages=max(2, int(slots * pages_per_seq
                                  * pool_headroom)) + 1)
         if params is None:

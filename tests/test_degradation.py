@@ -1,0 +1,391 @@
+"""Graceful-degradation layer: work-clock SLO expiry at every request
+lifecycle stage, watermark shedding, submit-time backpressure, per-tier
+scheduling quotas, straggler hedging, placement backoff, and the typed
+reject vocabulary. All deterministic (work-clock, never wall-clock)."""
+import math
+
+import pytest
+
+from repro.configs.base import get_config
+from repro.core.islands import IslandRegistry, personal_island
+from repro.core.lighthouse import Lighthouse
+from repro.core.mist import MIST
+from repro.core.tide import TIDE
+from repro.core.waves import WAVES, Policy, Request
+from repro.obs import Tracer
+from repro.serving.degrade import (FaultEvent, FaultPlan, OverloadPolicy,
+                                   RejectReason)
+from repro.serving.engine import TickOrchestrator, build_island_batchers
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("smollm-135m").reduced()
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    from repro.models.model import get_model
+    import jax
+    return get_model(cfg).init(jax.random.PRNGKey(0), "float32")
+
+
+def _mesh(cfg, params, *, islands=(("solo", 20.0),), overload=None,
+          straggler_patience=None, prefill_token_budget=None,
+          migration_token_budget=512):
+    reg = IslandRegistry()
+    for iid, lat in islands:
+        reg.register(personal_island(iid, latency_ms=lat,
+                                     capacity_units=2.0),
+                     reg.attestation_token(iid))
+    mist = MIST()
+    tide = TIDE(reg, straggler_patience=straggler_patience)
+    lh = Lighthouse(reg)
+    for i in reg.all():
+        lh.heartbeat(i.island_id)
+    waves = WAVES(mist, tide, lh, Policy())
+    bats = build_island_batchers(
+        cfg, reg, cache="paged", max_len=96, params=params,
+        prefill_token_budget=prefill_token_budget)
+    tracer = Tracer()
+    orch = TickOrchestrator(waves, reg, bats, decode_ticks_per_tick=1,
+                            migration_token_budget=migration_token_budget,
+                            overload=overload, debug_audit=True,
+                            tracer=tracer)
+    return orch, tracer
+
+
+def _expire_events(tracer, rid):
+    # orchestrator-scope terminals only (the batcher emits its own
+    # island-scoped expire span; terminal_counts ignores it too)
+    return [e for e in tracer.events
+            if e.kind == "expire" and e.rid == rid and e.island is None]
+
+
+def _assert_expired_once(orch, tracer, rid, stage):
+    """The shared exactly-once postcondition: one expire terminal at the
+    claimed stage, results resolve to None, never also completed."""
+    evs = _expire_events(tracer, rid)
+    assert len(evs) == 1
+    assert evs[0].attrs["stage"] == stage
+    assert orch.results[rid] is None
+    assert orch.tick_stats["expired"] == 1
+    assert not [e for e in tracer.events
+                if e.kind in ("complete", "finish") and e.rid == rid]
+    assert tracer.terminals_exactly_once([rid])
+    assert any(d.reason == RejectReason.EXPIRED for d in orch.rejected)
+
+
+# ------------------------------------------- expiry: every lifecycle stage
+
+def test_expire_while_queued(cfg, params):
+    """A zero-budget request expires at the next sweep while still in the
+    pending pool — never routed, never dispatched."""
+    orch, tracer = _mesh(cfg, params)
+    rid = orch.submit(Request("queued deadline victim",
+                              priority="primary", deadline_ms=0.0),
+                      max_new_tokens=4)
+    orch.tick()
+    _assert_expired_once(orch, tracer, rid, "queued")
+    assert not [e for e in tracer.events
+                if e.kind == "route" and e.rid == rid]
+    # further ticks never resurrect it
+    for _ in range(3):
+        orch.tick()
+    assert orch.tick_stats["expired"] == 1
+    assert orch.results[rid] is None
+
+
+def test_expire_mid_chunk_prefill(cfg, params):
+    """Budget blown while chunked prefill is still feeding the prompt:
+    the slot cancels before a first token ever exists, pages released."""
+    orch, tracer = _mesh(cfg, params, prefill_token_budget=16)
+    prompt = ("deadline prefill victim padding " * 4)[:80]
+    rid = orch.submit(Request(prompt, priority="primary", deadline_ms=60.0),
+                      max_new_tokens=8)
+    for _ in range(8):
+        orch.tick()
+        if rid in orch.results:
+            break
+    _assert_expired_once(orch, tracer, rid, "inflight")
+    b = orch.batchers["solo"]
+    rec = next(r for r in b.request_log.values()
+               if r.get("outcome") == "expired")
+    assert "first_token_tick" not in rec      # cancelled mid-prefill
+    assert b.pool.audit() and b.pool.in_use() == 0
+
+
+def test_expire_mid_fused_decode(cfg, params):
+    """Budget blown while decoding: partial output is discarded, the
+    expiry is the only terminal, and the pool drains clean."""
+    orch, tracer = _mesh(cfg, params)
+    rid = orch.submit(Request("decode victim xx", priority="primary",
+                              deadline_ms=30.0),
+                      max_new_tokens=48)
+    for _ in range(40):
+        orch.tick()
+        if rid in orch.results:
+            break
+    _assert_expired_once(orch, tracer, rid, "inflight")
+    b = orch.batchers["solo"]
+    rec = next(r for r in b.request_log.values()
+               if r.get("outcome") == "expired")
+    assert rec["generated_tokens"] > 0        # it WAS decoding
+    assert "first_token_tick" in rec
+    assert b.pool.audit() and b.pool.in_use() == 0
+
+
+def test_expire_frozen_in_flight(cfg, params):
+    """A request frozen into a migration ticket (drain begins the same
+    tick its budget lapses) expires at the frozen stage, charged to its
+    source island — the ticket is never placed anywhere."""
+    orch, tracer = _mesh(cfg, params)
+    rid = orch.submit(Request("frozen mid-flight deadline victim",
+                              priority="primary", deadline_ms=30.0),
+                      max_new_tokens=48)
+    for _ in range(40):
+        orch.tick()
+        if orch.mesh_work >= 30.0 or rid in orch.results:
+            break
+    assert rid not in orch.results            # alive, budget just blown
+    orch.drain_island("solo")
+    orch.tick()                               # freeze, then the sweep
+    _assert_expired_once(orch, tracer, rid, "frozen")
+    assert _expire_events(tracer, rid)[0].attrs["island"] == "solo"
+    assert orch.tick_stats["migrations_started"] == 1
+    for _ in range(3):
+        orch.tick()                           # drain finalizes cleanly
+    assert not orch._draining
+
+
+def test_completion_beats_expiry_on_the_same_tick(cfg, params):
+    """A request whose deadline lapses after it already finished is
+    delivered normally — completion and expiry are mutually exclusive."""
+    orch, tracer = _mesh(cfg, params)
+    rid = orch.submit(Request("fits inside its budget", priority="primary",
+                              deadline_ms=500.0),
+                      max_new_tokens=3)
+    for _ in range(30):
+        orch.tick()
+        if rid in orch.results:
+            break
+    assert orch.results[rid] is not None
+    assert orch.tick_stats["expired"] == 0
+    assert not _expire_events(tracer, rid)
+    assert tracer.terminals_exactly_once([rid])
+
+
+def test_expiry_feeds_tide_pressure(cfg, params):
+    """note_expiry inflates the island's queued-work signal so routing
+    backs off islands that blow deadlines."""
+    orch, _ = _mesh(cfg, params)
+    tide = orch.waves.tide
+    before = tide._st("solo").inflight
+    rid = orch.submit(Request("decode victim yy", priority="primary",
+                              deadline_ms=30.0),
+                      max_new_tokens=48)
+    for _ in range(40):
+        orch.tick()
+        if rid in orch.results:
+            break
+    assert orch.results[rid] is None
+    assert tide._st("solo").inflight > before
+
+
+# ------------------------------------------------- shedding / backpressure
+
+def test_watermark_shed_drops_newest_lowest_priority(cfg, params):
+    orch, tracer = _mesh(
+        cfg, params,
+        overload=OverloadPolicy(queue_watermark=2))
+    keep = orch.submit(Request("primary keeper", priority="primary"),
+                       max_new_tokens=2)
+    shed_rids = [orch.submit(Request(f"sheddable {i}",
+                                     priority="secondary"),
+                             max_new_tokens=2)
+                 for i in range(5)]
+    orch.tick()
+    assert orch.tick_stats["shed"] == 4       # down to the watermark
+    # newest-first: the OLDEST secondary survives alongside the primary
+    assert shed_rids[0] not in [e.rid for e in tracer.events
+                                if e.kind == "reject"]
+    for rid in shed_rids[1:]:
+        assert orch.results[rid] is None
+    assert keep not in orch.results or orch.results[keep] is not None
+    reasons = {str(d.reason) for d in orch.rejected}
+    assert reasons == {str(RejectReason.SHED)}
+
+
+def test_backpressure_bounces_sheddable_at_submit(cfg, params):
+    """With the hardened saturation hint at the threshold, sheddable
+    priorities bounce at submit; primary is never backpressured."""
+    orch, tracer = _mesh(
+        cfg, params,
+        overload=OverloadPolicy(queue_watermark=8, backpressure_pct=100))
+    orch.waves.lighthouse.report_saturation(1.0)
+    bounced = orch.submit(Request("burstable victim", priority="burstable"),
+                          max_new_tokens=2)
+    assert orch.results[bounced] is None
+    assert orch.tick_stats["backpressure_rejects"] == 1
+    assert any(d.reason == RejectReason.BACKPRESSURE
+               for d in orch.rejected)
+    assert tracer.terminals_exactly_once([bounced])
+    vip = orch.submit(Request("primary passes", priority="primary"),
+                      max_new_tokens=2)
+    assert vip not in orch.results            # enqueued, not bounced
+
+
+def test_stale_telemetry_suppresses_saturation_hint(cfg, params):
+    """A stale LIGHTHOUSE freezes saturation intake — the hint cannot
+    rise (or fall) on stale data, so backpressure keeps its last view."""
+    orch, _ = _mesh(
+        cfg, params,
+        overload=OverloadPolicy(queue_watermark=8, backpressure_pct=100))
+    lh = orch.waves.lighthouse
+    lh.stale = True
+    lh.report_saturation(1.0)                 # dropped while stale
+    rid = orch.submit(Request("burstable passes while stale",
+                              priority="burstable"), max_new_tokens=2)
+    assert rid not in orch.results
+    lh.stale = False
+    lh.report_saturation(1.0)
+    rid2 = orch.submit(Request("burstable bounced when fresh",
+                               priority="burstable"), max_new_tokens=2)
+    assert orch.results[rid2] is None
+
+
+# --------------------------------------------------- per-tier quotas
+
+def test_tier_quota_validation(cfg, params):
+    from repro.serving.batcher import make_batcher
+    with pytest.raises(ValueError):
+        make_batcher(cfg, cache="paged", params=params, num_slots=4,
+                     max_len=96, tier_quotas={1: 3, 3: 2})   # sum > slots
+    with pytest.raises(ValueError):
+        make_batcher(cfg, cache="paged", params=params, num_slots=4,
+                     max_len=96, tier_quotas={1: 0})
+    with pytest.raises(ValueError):
+        make_batcher(cfg, cache="paged", params=params, num_slots=4,
+                     max_len=96, prefill="full", tier_quotas={1: 2})
+
+
+def test_tier_quota_isolates_probe_timing(cfg, params):
+    """The PR-7 residual: with quotas, a tier-3 probe's (ttft, done)
+    fingerprint is invariant to co-resident tier-1 load."""
+    from repro.serving.batcher import make_batcher
+
+    def probe_timing(n_victims):
+        b = make_batcher(cfg, cache="paged", params=params, num_slots=4,
+                         max_len=96, prefill_token_budget=16,
+                         tier_quotas={1: 2, 3: 2})
+        for k in range(n_victims):
+            b.submit(f"tier one victim workload {k} with padding",
+                     max_new_tokens=4, trust_tier=1)
+        probe = b.submit("adv probe", max_new_tokens=3, trust_tier=3)
+        b.run_until_done()
+        rec = b.request_log[probe]
+        return rec["ttft_ticks"], rec["done_tick"]
+
+    assert probe_timing(0) == probe_timing(2)
+
+
+# ------------------------------------------- stragglers, hedging, backoff
+
+def test_straggler_hedge_completes_elsewhere(cfg, params):
+    """A slowed island gets flagged by TIDE and its in-flight work hedges
+    to a healthy island through the ticket path; everything completes."""
+    orch, _ = _mesh(cfg, params,
+                    islands=(("fast", 20.0), ("slow", 20.0)),
+                    straggler_patience=2)
+    rids = [orch.submit(Request(f"hedged request {i} with some padding",
+                                priority="primary"),
+                        max_new_tokens=12)
+            for i in range(4)]
+    orch.tick()                               # place them
+    loaded = {iid for iid, _ in orch._local_inflight}
+    assert loaded                             # something is in flight
+    victim = sorted(loaded)[0]
+    orch.batchers[victim].set_slowdown(50)
+    for _ in range(60):
+        orch.tick()
+        if all(r in orch.results for r in rids):
+            break
+    assert all(orch.results[r] is not None for r in rids)
+    assert orch.tick_stats["hedges"] >= 1
+
+
+def test_placement_backoff_caps_migration_churn(cfg, params):
+    """When a drain has nowhere to go, the frozen request returns to its
+    source ONCE and backs off exponentially instead of thrashing the
+    freeze/thaw path every tick."""
+    orch, tracer = _mesh(cfg, params)
+    rid = orch.submit(Request("nowhere to go", priority="primary"),
+                      max_new_tokens=10)
+    orch.tick()
+    orch.drain_island("solo")
+    for _ in range(10):
+        orch.tick()
+        if rid in orch.results:
+            break
+    assert orch.results[rid] is not None      # finished on its source
+    assert orch.tick_stats["migration_returns"] == 1
+    ev = next(e for e in tracer.events if e.kind == "migrate_return")
+    assert ev.attrs["attempts"] == 1 and ev.attrs["backoff_ticks"] == 16
+
+
+def test_mesh_work_clock_monotonic_across_failure(cfg, params):
+    """An island failure drops its batcher clock; the mesh work clock —
+    the one deadlines expire against — never goes backwards."""
+    orch, _ = _mesh(cfg, params, islands=(("a", 20.0), ("b", 25.0)))
+    for i in range(3):
+        orch.submit(Request(f"pre-failure work {i}", priority="primary"),
+                    max_new_tokens=4)
+    for _ in range(3):
+        orch.tick()
+    before = orch.mesh_work
+    assert before > 0
+    orch.fail_island(sorted(orch.batchers)[0])
+    for _ in range(8):
+        orch.tick()
+        assert orch.mesh_work >= before
+        before = orch.mesh_work
+
+
+# --------------------------------------------- fault plan and vocabulary
+
+def test_fault_plan_applies_in_order(cfg, params):
+    orch, _ = _mesh(cfg, params)
+    fired = []
+    plan = FaultPlan([
+        FaultEvent(tick=0, kind="slowdown", island="solo", factor=3),
+        FaultEvent(tick=1, kind="telemetry_stale", on=True),
+        FaultEvent(tick=2, kind="burst",
+                   submit=lambda o: fired.append(True)),
+        FaultEvent(tick=2, kind="telemetry_stale", on=False),
+        FaultEvent(tick=3, kind="recover", island="solo"),
+    ])
+    assert not plan.done()
+    for t in range(4):
+        plan.step(orch)
+        if t == 0:
+            assert orch.batchers["solo"].slowdown == 3
+        if t == 1:
+            assert orch.waves.lighthouse.stale
+        orch.tick()
+    assert orch.batchers["solo"].slowdown == 1
+    assert not orch.waves.lighthouse.stale
+    assert fired == [True]
+    assert plan.done()
+    assert [k for _t, k, _i in plan.applied] == [
+        "slowdown", "telemetry_stale", "burst", "telemetry_stale",
+        "recover"]
+
+
+def test_reject_reasons_are_a_shared_str_enum():
+    """Every terminal-failure reason is one enum; historical string
+    comparisons against Decision.reason keep working."""
+    assert RejectReason.SHED == "shed"
+    assert str(RejectReason.EXPIRED) == "expired"
+    assert isinstance(RejectReason.BACKPRESSURE, str)
+    assert {r.value for r in RejectReason} >= {
+        "shed", "backpressure", "expired", "infeasible"}
