@@ -12,7 +12,7 @@ import time
 def main() -> None:
     from benchmarks import (degradation, feature_matrix, kernels_micro,
                             leakage, micro, roofline, routing_policies,
-                            serving)
+                            serving, trace)
     t0 = time.time()
     print("name,us_per_call,derived")
     modules = [
@@ -22,6 +22,7 @@ def main() -> None:
         ("serving", serving.run),
         ("leakage", leakage.run),
         ("degradation", degradation.run),
+        ("trace", trace.run),
         ("kernels_micro", kernels_micro.run),
         ("roofline", roofline.run),
     ]

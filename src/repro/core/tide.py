@@ -59,6 +59,13 @@ MIGRATION_TOKENS_PER_UNIT = 128.0
 # decays — saturated islands stop attracting the work they cannot finish.
 EXPIRY_PENALTY_UNITS = 1.0
 
+# One queued work unit's worth of SLO lag: work-clock units by which an
+# island's resident requests have overshot their class TTFT/TPOT targets
+# (report_slo_lag). A softer signal than note_expiry — it fires while the
+# SLO is merely *at risk* rather than blown, so class-aware routing sheds
+# load off a lagging island before deadlines start expiring on it.
+SLO_LAG_TOKENS_PER_UNIT = 96.0
+
 
 @dataclass
 class LoadState:
@@ -226,6 +233,25 @@ class TIDE:
         st = self._st(island_id)
         st.inflight += EXPIRY_PENALTY_UNITS \
             / max(island.capacity_units, 1e-6)
+
+    def report_slo_lag(self, island_id: str, lag_tokens: float):
+        """Per-class SLO pressure feedback from the engine: ``lag_tokens``
+        is the summed work-clock overshoot of the island's resident
+        requests against their class TTFT/TPOT targets this tick. It
+        converts to queued inflight work at ``SLO_LAG_TOKENS_PER_UNIT``,
+        inflating the queueing-latency term the routing kernel scores —
+        the latency/queueing objective becomes SLO-aware without touching
+        the score formula. Decays with the virtual clock like every other
+        load signal."""
+        if lag_tokens <= 0.0 or island_id not in self.registry:
+            return
+        island = self.registry.get(island_id)
+        if island.unbounded:
+            return
+        st = self._st(island_id)
+        queued = lag_tokens / SLO_LAG_TOKENS_PER_UNIT
+        st.inflight = max(st.inflight,
+                          queued / max(island.capacity_units, 1e-6))
 
     def admits(self, island_id: str, priority: str = "secondary") -> bool:
         if not self._active(island_id):

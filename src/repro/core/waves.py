@@ -39,6 +39,9 @@ class Request:
     user: str = "user0"
     prev_privacy: float = 1.0              # P of island holding the context
     sensitivity_override: Optional[float] = None
+    slo_class: Optional[str] = None        # SLO service class name (the
+                                           # engine resolves it against its
+                                           # registered SLOClass table)
 
 
 @dataclass

@@ -8,8 +8,8 @@ MIST's regex + classifier actually fire on realistic content.
 from __future__ import annotations
 
 import random
-from dataclasses import dataclass
 
+from repro.core.tracegen import cyclic_text, sample_mixture_template
 from repro.core.waves import Request
 
 _HIGH = [
@@ -37,27 +37,32 @@ _LOW = [
 _NAMES = ["John Doe", "Alice Johnson", "Maria Garcia", "Wei Chen", "Priya Patel"]
 
 
+def _medical_fill(rng: random.Random) -> dict:
+    """PHI-shaped template fills. Draw order (age, name, mrn, ssn x3, dd)
+    is the historical ``str.format`` kwargs order — part of the seed
+    contract shared with every committed benchmark artifact."""
+    return dict(age=rng.randint(25, 80), name=rng.choice(_NAMES),
+                mrn=rng.randint(10 ** 5, 10 ** 6),
+                ssn=f"{rng.randint(100,999)}-{rng.randint(10,99)}-{rng.randint(1000,9999)}",
+                dd=rng.randint(10, 28))
+
+
 def healthcare_workload(n: int = 1000, seed: int = 0,
                         mix=(0.40, 0.35, 0.25)):
     """Returns list of (Request, true_tier) where true_tier is the paper's
-    intended placement: 'high'|'moderate'|'low'."""
+    intended placement: 'high'|'moderate'|'low'.
+
+    Built on ``tracegen.sample_mixture_template`` — the trace harness and
+    the handcrafted benchmarks share one seeded corpus path, and the
+    output is bit-identical to the pre-tracegen generator (parity-locked
+    by tests/test_tracegen.py)."""
     rng = random.Random(seed)
+    buckets = ((mix[0], _HIGH, "high", "primary"),
+               (mix[1], _MODERATE, "moderate", "secondary"),
+               (mix[2], _LOW, "low", "burstable"))
     out = []
     for _ in range(n):
-        u = rng.random()
-        if u < mix[0]:
-            t = rng.choice(_HIGH)
-            kind, prio = "high", "primary"
-        elif u < mix[0] + mix[1]:
-            t = rng.choice(_MODERATE)
-            kind, prio = "moderate", "secondary"
-        else:
-            t = rng.choice(_LOW)
-            kind, prio = "low", "burstable"
-        q = t.format(age=rng.randint(25, 80), name=rng.choice(_NAMES),
-                     mrn=rng.randint(10 ** 5, 10 ** 6),
-                     ssn=f"{rng.randint(100,999)}-{rng.randint(10,99)}-{rng.randint(1000,9999)}",
-                     dd=rng.randint(10, 28))
+        q, kind, prio = sample_mixture_template(rng, buckets, _medical_fill)
         out.append((Request(query=q, priority=prio, user=f"u{rng.randint(0,3)}"),
                     kind))
     return out
@@ -77,8 +82,7 @@ LONG_PROMPT_CHARS = 75
 def shared_head_prompts(n: int, head_tokens: int = SHARED_HEAD_TOKENS):
     """``n`` prompts sharing an identical ``head_tokens``-byte head
     followed by a distinct tail. Returns ``(head, prompts)``."""
-    head = "".join("the patient record header section "[i % 34]
-                   for i in range(head_tokens))
+    head = cyclic_text("the patient record header section ", head_tokens)
     return head, [head + f" case {i}" for i in range(n)]
 
 
@@ -109,19 +113,27 @@ def tiered_serving_prompts(n: int = 16, seed: int = 7):
             for i, (req, _kind) in enumerate(wl)]
 
 
+_LEGAL = [
+    "Find precedents for breach of fiduciary duty, case no: {x}",
+    "Privileged and confidential: summarize deposition of {name}",
+    "Retrieve similar contracts to the {org} asset purchase agreement",
+]
+
+
+def _legal_fill(rng: random.Random) -> dict:
+    return dict(x=f"22-cv-{rng.randint(1000,9999)}", name=rng.choice(_NAMES),
+                org=rng.choice(["Acme Corp", "Globex LLC", "Initech Inc"]))
+
+
 def legal_workload(n: int = 200, seed: int = 0):
-    """Scenario C: all case-law queries require the firm's vector index."""
+    """Scenario C: all case-law queries require the firm's vector index.
+    Single-bucket fold onto the shared tracegen corpus path (parity-
+    locked: no mixture draw, same per-request rng sequence)."""
     rng = random.Random(seed)
-    temps = [
-        "Find precedents for breach of fiduciary duty, case no: {x}",
-        "Privileged and confidential: summarize deposition of {name}",
-        "Retrieve similar contracts to the {org} asset purchase agreement",
-    ]
+    buckets = ((1.0, _LEGAL, "high", "secondary"),)
     out = []
     for _ in range(n):
-        q = rng.choice(temps).format(
-            x=f"22-cv-{rng.randint(1000,9999)}", name=rng.choice(_NAMES),
-            org=rng.choice(["Acme Corp", "Globex LLC", "Initech Inc"]))
+        q, kind, prio = sample_mixture_template(rng, buckets, _legal_fill)
         out.append((Request(query=q, dataset="caselaw-10tb",
-                            priority="secondary"), "high"))
+                            priority=prio), kind))
     return out

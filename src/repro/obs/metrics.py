@@ -98,6 +98,22 @@ class MetricsRegistry:
         return out
 
 
+def jain_index(values: Iterable) -> float:
+    """Jain's fairness index ``(sum x)^2 / (n * sum x^2)`` over per-tenant
+    work-clock service. 1.0 = perfectly even; 1/n = one tenant has
+    everything. Empty or all-zero inputs read as fair (1.0): fairness of
+    nothing is not a violation."""
+    vals = [float(v) for v in values]
+    n = len(vals)
+    if n == 0:
+        return 1.0
+    s = sum(vals)
+    s2 = sum(v * v for v in vals)
+    if s2 <= 0.0:
+        return 1.0
+    return (s * s) / (n * s2)
+
+
 def collect_batcher_metrics(batcher,
                             registry: Optional[MetricsRegistry] = None
                             ) -> MetricsRegistry:
@@ -132,4 +148,31 @@ def collect_batcher_metrics(batcher,
         reg.observe("pool_pages_peak", pool.stats["peak_in_use"])
         reg.observe("pool_occupancy_pct",
                     round(100.0 * pool.occupancy(), 1))
+    return reg
+
+
+def collect_orchestrator_metrics(orch,
+                                 registry: Optional[MetricsRegistry] = None
+                                 ) -> MetricsRegistry:
+    """Mesh-level fold: every island batcher's metrics, plus the SLO-class
+    and tenant-fairness accounting the orchestrator keeps (per-class
+    work-clock TTFT/TPOT histograms, per-tenant service histogram, the
+    min-over-run Jain index). Deterministic quantities only."""
+    reg = registry or MetricsRegistry()
+    for _iid, b in sorted(orch.batchers.items()):
+        collect_batcher_metrics(b, reg)
+    for tenant, svc in sorted(orch.tenant_service.items()):
+        reg.observe("tenant_service_work", svc)
+    reg.inc("tenants", len(orch.tenant_service))
+    reg.observe("fairness_jain",
+                jain_index(orch.tenant_service.values()))
+    reg.observe("fairness_min_jain",
+                orch.tick_stats.get("fairness_min_jain", 1.0))
+    for cls, log in sorted(orch.class_log.items()):
+        reg.observe_many(f"ttft_work[{cls}]", log["ttft_work"])
+        reg.observe_many(f"tpot_work[{cls}]", log["tpot_work"])
+        reg.inc(f"completed[{cls}]", log["completed"])
+        reg.inc(f"expired[{cls}]", log["expired"])
+        reg.inc(f"shed[{cls}]", log["shed"])
+        reg.inc(f"rejected[{cls}]", log["rejected"])
     return reg

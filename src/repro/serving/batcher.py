@@ -126,7 +126,8 @@ class _BatcherBase:
     """Queue/slot lifecycle shared by both cache managers."""
 
     def __init__(self, cfg, params=None, num_slots=4, max_len=256,
-                 seed=0, dtype="float32", temperature=0.0):
+                 seed=0, dtype="float32", temperature=0.0,
+                 class_aware=False):
         self.cfg = cfg
         self.model = get_model(cfg)
         self.params = (params if params is not None
@@ -134,6 +135,12 @@ class _BatcherBase:
         self.num_slots = num_slots
         self.max_len = max_len
         self.temperature = temperature
+        # SLO-class-aware scheduling (opt-in): admission and budgeted
+        # prefill prefer the highest ``slo_rank`` (FCFS within a rank),
+        # and page-exhaustion preemption prefers low-rank victims — a
+        # batch-class request yields to an interactive one. False keeps
+        # every scheduling decision bit-identical to the unranked path.
+        self.class_aware = class_aware
         self.tok = ByteTokenizer(cfg.vocab_size)
         self.key = jax.random.PRNGKey(seed + 1)
         self.slots = [SlotState() for _ in range(num_slots)]
@@ -200,18 +207,23 @@ class _BatcherBase:
 
     # --------------------------------------------------------- submission
     def submit(self, prompt: str, max_new_tokens=16,
-               trust_tier: Optional[int] = None) -> int:
+               trust_tier: Optional[int] = None, slo_rank: int = 0) -> int:
         """Enqueue a request. ``trust_tier`` tags the KV pages it produces
         (paged mode); None = untiered, which shares nothing (fail closed).
-        The stacked cache manager ignores the tier."""
+        The stacked cache manager ignores the tier. ``slo_rank`` is the
+        request's SLO-class urgency (higher = tighter TTFT target; 0 =
+        unclassed/batch) — inert unless ``class_aware`` is set."""
         rid = self._next_id
         self._next_id += 1
         self.queue.append((rid, prompt, max_new_tokens, trust_tier))
         self.stats["queued_peak"] = max(self.stats["queued_peak"],
                                         len(self.queue))
-        self.request_log[rid] = {"submit_tick": self.stats["ticks"],
-                                 "submit_work": self.work_clock,
-                                 "tokens_skipped": 0}
+        rec = {"submit_tick": self.stats["ticks"],
+               "submit_work": self.work_clock,
+               "tokens_skipped": 0}
+        if slo_rank:
+            rec["slo_rank"] = slo_rank  # carries across migrations (log)
+        self.request_log[rid] = rec
         if self.tracer is not None:
             self._trace("queue", rid=rid, tier=trust_tier,
                         max_new=max_new_tokens)
@@ -250,6 +262,31 @@ class _BatcherBase:
                         phase=ticket.phase,
                         kv_tokens=ticket.kv_tokens)
         return rid
+
+    # --------------------------------------------- class-aware scheduling
+    def _rank_of(self, rid: int) -> int:
+        rec = self.request_log.get(rid)
+        return rec.get("slo_rank", 0) if rec else 0
+
+    def _slot_rank(self, si: int) -> int:
+        s = self.slots[si]
+        return self._rank_of(s.request_id) if s.active else 0
+
+    def _queue_pick(self, admissible=None) -> Optional[int]:
+        """Index of the next queue entry to admit. FCFS by default;
+        ``class_aware`` batchers prefer the highest ``slo_rank`` (strict
+        ``>`` keeps FCFS order within a rank). ``admissible(tier)``
+        filters entries (the per-tier quota scan)."""
+        best = None
+        for i, (rid, _p, _mn, tier) in enumerate(self.queue):
+            if admissible is not None and not admissible(tier):
+                continue
+            if not self.class_aware:
+                return i
+            r = self._rank_of(rid)
+            if best is None or r > best[0]:
+                best = (r, i)
+        return None if best is None else best[1]
 
     # ----------------------------------------------------------- migration
     def freeze_request(self, rid: int) -> Optional[MigrationTicket]:
@@ -488,9 +525,10 @@ class ContinuousBatcher(_BatcherBase):
     """Dense stacked-slot cache manager (PR 1 semantics, unchanged)."""
 
     def __init__(self, cfg, params=None, num_slots=4, max_len=256,
-                 seed=0, dtype="float32", temperature=0.0):
+                 seed=0, dtype="float32", temperature=0.0,
+                 class_aware=False):
         super().__init__(cfg, params, num_slots, max_len, seed, dtype,
-                         temperature)
+                         temperature, class_aware=class_aware)
         # stacked slot caches: leading axis = slot
         one = self.model.init_cache(1, max_len, dtype=jnp.bfloat16)
         self._cache = jax.tree.map(
@@ -504,7 +542,8 @@ class ContinuousBatcher(_BatcherBase):
         for si, s in enumerate(self.slots):
             if s.active or not self.queue:
                 continue
-            rid, prompt, max_new, tier = self.queue.pop(0)
+            qi = self._queue_pick()
+            rid, prompt, max_new, tier = self.queue.pop(qi)
             ticket = self._tickets.pop(rid, None)
             if ticket is not None and self._thaw_dense(si, rid, ticket):
                 continue
@@ -661,7 +700,8 @@ class PagedContinuousBatcher(_BatcherBase):
                  seed=0, dtype="float32", temperature=0.0, page_size=16,
                  num_pages=None, sharing=True, prefill="chunked",
                  prefill_token_budget=None, fused=True,
-                 constant_shape=False, tier_quotas=None):
+                 constant_shape=False, tier_quotas=None,
+                 class_aware=False):
         if not paged_supported(cfg):
             raise ValueError(
                 f"paged KV cache requires a full-history attention-only "
@@ -685,7 +725,7 @@ class PagedContinuousBatcher(_BatcherBase):
                     f"tier_quotas {tier_quotas} must be >=1 each and sum "
                     f"to at most num_slots={num_slots}")
         super().__init__(cfg, params, num_slots, max_len, seed, dtype,
-                         temperature)
+                         temperature, class_aware=class_aware)
         self.page_size = page_size
         self.pages_per_seq = -(-max_len // page_size)
         if num_pages is None:
@@ -838,9 +878,10 @@ class PagedContinuousBatcher(_BatcherBase):
         for si, s in enumerate(self.slots):
             if s.active:
                 continue
-            if not self.queue:
+            qi = self._queue_pick()
+            if qi is None:
                 break
-            rid, prompt, max_new, tier = self.queue[0]
+            rid, prompt, max_new, tier = self.queue[qi]
             ticket = self._tickets.get(rid)
             if ticket is not None:
                 ids = ticket.context_ids()
@@ -867,7 +908,7 @@ class PagedContinuousBatcher(_BatcherBase):
             if total >= self.max_len \
                     or -(-total // self.page_size) \
                     > self.pool.num_pages - 1:
-                self.queue.pop(0)
+                self.queue.pop(qi)
                 self._tickets.pop(rid, None)
                 self.finished[rid] = None
                 self.stats["rejected_too_large"] += 1
@@ -882,7 +923,7 @@ class PagedContinuousBatcher(_BatcherBase):
                 self.pool.stats["blocked"] += 1
                 self.blocked_last_tick += 1
                 break
-            self.queue.pop(0)
+            self.queue.pop(qi)
             self._tickets.pop(rid, None)
             for pid in shared:
                 self.pool.incref(pid)
@@ -942,13 +983,16 @@ class PagedContinuousBatcher(_BatcherBase):
         the rest for budgeted dispatch by ``_prefill_tick``. No model
         dispatch happens here, so admission can never block decode.
         Migration tickets resolve here too: KV-page import when legal and
-        affordable, recompute-of-context otherwise."""
+        affordable, recompute-of-context otherwise. ``class_aware``
+        batchers admit the most urgent SLO rank first (``_queue_pick``)
+        instead of strict FCFS."""
         for si, s in enumerate(self.slots):
             if s.active:
                 continue
-            if not self.queue:
+            qi = self._queue_pick()
+            if qi is None:
                 break
-            rid, prompt, max_new, tier = self.queue[0]
+            rid, prompt, max_new, tier = self.queue[qi]
             ticket = self._tickets.get(rid)
             if ticket is not None:
                 status = self._admit_ticket(si, rid, ticket)
@@ -962,7 +1006,7 @@ class PagedContinuousBatcher(_BatcherBase):
                 self.pool.stats["blocked"] += 1
                 self.blocked_last_tick += 1
                 break
-            self.queue.pop(0)
+            self.queue.pop(qi)
             self._tickets.pop(rid, None)
             self._enc_len.pop(rid, None)
 
@@ -992,8 +1036,7 @@ class PagedContinuousBatcher(_BatcherBase):
         for si, s in enumerate(self.slots):
             if s.active:
                 continue
-            qi = next((i for i, (_r, _p, _mn, t) in enumerate(self.queue)
-                       if self._quota_admits(t)), None)
+            qi = self._queue_pick(admissible=self._quota_admits)
             if qi is None:
                 break            # empty queue, or every queued tier capped
             rid, prompt, max_new, tier = self.queue[qi]
@@ -1214,18 +1257,23 @@ class PagedContinuousBatcher(_BatcherBase):
         (prefix-skipped chunks are free and don't consume budget). The
         round-robin pointer ROTATES — the next tick resumes after the last
         slot served — so even a budget of one chunk per tick cannot starve
-        a short prompt sitting behind a long one."""
+        a short prompt sitting behind a long one. ``class_aware`` batchers
+        serve higher SLO ranks first (stable sort: rotation order holds
+        within a rank), so an interactive prompt's chunks never queue
+        behind a batch prompt's under a tight budget."""
         budget = self.prefill_token_budget
         n = self.num_slots
         start = self._prefill_rr
+        order = [(start + k) % n for k in range(n)]
+        if self.class_aware:
+            order.sort(key=lambda si: -self._slot_rank(si))
         rows = []
         progress = True
         while budget > 0 and progress:
             progress = False
-            for k in range(n):
+            for si in order:
                 if budget <= 0:
                     break
-                si = (start + k) % n
                 s = self.slots[si]
                 if not (s.active and s.next_chunk < len(s.chunks)):
                     continue
@@ -1643,7 +1691,15 @@ class PagedContinuousBatcher(_BatcherBase):
                 return (len(s.pages) * self.page_size + len(s.generated)
                         + s.gen_dev)
 
-            victim = min(stalled + prefilling, key=invested)
+            # class-aware: victims come from the class with the most SLO
+            # headroom first (lowest slo_rank — batch before interactive);
+            # least-invested breaks ties so recompute cost stays minimal
+            if self.class_aware:
+                victim = min(stalled + prefilling,
+                             key=lambda si: (self._slot_rank(si),
+                                             invested(si)))
+            else:
+                victim = min(stalled + prefilling, key=invested)
             if victim in stalled:
                 stalled.remove(victim)
             # the resume ticket needs the victim's full token stream on

@@ -27,6 +27,7 @@ hedge -> fail.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
 from enum import Enum
 from typing import Callable, Optional
@@ -36,6 +37,49 @@ from typing import Callable, Optional
 # the mesh dispatches). Virtual wall time is not CI-gateable; the work
 # clock is, so SLO enforcement budgets in work units.
 SLO_WORK_PER_MS = 1.0
+
+
+@dataclass(frozen=True)
+class SLOClass:
+    """A named service class: the unit of SLO-aware scheduling.
+
+    Targets are in deterministic work-clock units (same clock as
+    ``deadline_ms`` via ``SLO_WORK_PER_MS``), never wall time:
+
+    * ``deadline_ms``       — per-request expiry budget applied at
+      submit when the request doesn't carry its own deadline
+    * ``ttft_work_target``  — work units from submit to first token
+    * ``tpot_work_target``  — work units per generated token after the
+      first (time-per-output-token)
+    * ``priority``          — WAVES priority requests of this class
+      inherit (feeds routing constraints and the shed ladder)
+
+    ``math.inf`` disables a target; a class with no finite TTFT target
+    (e.g. batch) gets urgency rank 0 and is the preferred preemption
+    victim / last in class-aware admission order.
+    """
+
+    name: str
+    deadline_ms: float = math.inf
+    ttft_work_target: float = math.inf
+    tpot_work_target: float = math.inf
+    priority: str = "secondary"
+
+
+def slo_rank_map(classes) -> dict:
+    """Map class name -> integer urgency rank (higher = more urgent).
+
+    Classes with a finite TTFT target are ranked by tightness (tightest
+    target gets the highest rank, starting at 1); classes with no
+    finite TTFT target rank 0 alongside unclassed requests. Ties in
+    target share a deterministic order by name.
+    """
+    finite = sorted((c for c in classes if math.isfinite(c.ttft_work_target)),
+                    key=lambda c: (-c.ttft_work_target, c.name))
+    ranks = {c.name: 0 for c in classes}
+    for i, c in enumerate(finite):
+        ranks[c.name] = i + 1
+    return ranks
 
 
 class RejectReason(str, Enum):

@@ -43,9 +43,9 @@ from repro.core.waves import Decision, Request
 from repro.data.tokenizer import ByteTokenizer
 from repro.models.model import get_model
 from repro.models.steps import make_prefill_step, make_serve_step
-from repro.obs.metrics import latency_summary
+from repro.obs.metrics import jain_index, latency_summary, percentile
 from repro.serving.degrade import (SLO_WORK_PER_MS, OverloadPolicy,
-                                   RejectReason)
+                                   RejectReason, slo_rank_map)
 from repro.serving.kvpool import trust_tier_for_sensitivity
 from repro.serving.migration import MigrationTicket, ticket_fits
 
@@ -270,7 +270,8 @@ class TickOrchestrator:
     def __init__(self, waves, registry, batchers=None, seed=0,
                  decode_ticks_per_tick=4, tick_interval_s=0.05,
                  migration_token_budget=512, tracer=None,
-                 overload=None, debug_audit=False):
+                 overload=None, debug_audit=False,
+                 slo_classes=None, slo_aware=True, fair_tenancy=False):
         self.waves = waves
         self.registry = registry
         self.batchers = batchers or {}
@@ -328,7 +329,30 @@ class TickOrchestrator:
                            "restarts": 0, "failovers": 0,
                            "migration_returns": 0, "islands_drained": 0,
                            "expired": 0, "shed": 0, "hedges": 0,
-                           "backpressure_rejects": 0}
+                           "backpressure_rejects": 0,
+                           "fairness_min_jain": 1.0}
+        # SLO classes: name -> SLOClass. A request tagged with a class
+        # inherits its deadline (request-level deadline_ms wins when
+        # finite) and its urgency rank for class-aware batcher
+        # scheduling. slo_aware=False keeps the classes for ACCOUNTING
+        # (attainment still measured) but stops them from influencing
+        # any scheduling decision — the A/B arm of the trace harness.
+        self.slo_classes: dict = dict(slo_classes or {})
+        self.slo_aware = slo_aware
+        self._slo_ranks = slo_rank_map(self.slo_classes.values())
+        self.class_log = {name: {"ttft_work": [], "tpot_work": [],
+                                 "completed": 0, "expired": 0,
+                                 "shed": 0, "rejected": 0}
+                          for name in self.slo_classes}
+        # per-tenant work-clock service (prompt tokens computed +
+        # generated tokens, from the serving batcher's request log) and
+        # the tenants that ever entered the pool — the basis of the
+        # fairness accounting. fair_tenancy=True additionally orders
+        # each tick's routing pool to interleave tenants, least-served
+        # first, instead of pure submission order.
+        self.fair_tenancy = fair_tenancy
+        self.tenant_service: dict[str, int] = {}
+        self._tenant_seen: set = set()
         hook = getattr(registry, "add_teardown_hook", None)
         if hook is not None:
             hook(self._on_island_deregistered)
@@ -358,11 +382,18 @@ class TickOrchestrator:
         rid = self._next_rid
         self._next_rid += 1
         p = PendingRequest(rid, req, max_new_tokens, self.waves.tide.clock)
-        if math.isfinite(req.deadline_ms):
+        deadline_ms = req.deadline_ms
+        if not math.isfinite(deadline_ms):
+            # a request without its own deadline inherits its SLO class's
+            # (request-level deadline always wins when finite)
+            cls = self._class_of(req)
+            if cls is not None:
+                deadline_ms = cls.deadline_ms
+        if math.isfinite(deadline_ms):
             # the deadline becomes a work-clock budget at admission — the
             # only clock the deterministic benchmarks can gate on
             p.deadline_work = self.mesh_work \
-                + req.deadline_ms * SLO_WORK_PER_MS
+                + deadline_ms * SLO_WORK_PER_MS
         if self.tracer is not None:
             self._otrace("submit", rid=rid, priority=req.priority,
                          max_new=max_new_tokens)
@@ -380,9 +411,11 @@ class TickOrchestrator:
             self.rejected.append(d)
             self.results[rid] = None
             self.tick_stats["backpressure_rejects"] += 1
+            self._class_count(req, "rejected")
             self._otrace("reject", rid=rid,
                          reason=str(RejectReason.BACKPRESSURE))
             return rid
+        self._tenant_seen.add(req.user)
         self.pending.append(p)
         self.tick_stats["pool_peak"] = max(self.tick_stats["pool_peak"],
                                            len(self.pending))
@@ -398,6 +431,152 @@ class TickOrchestrator:
             self.tick()
             ticks += 1
         return self.results.get(rid)
+
+    # ------------------------------------------ SLO classes and fairness
+    def _class_of(self, req):
+        """The request's SLOClass, or None when untagged/unregistered."""
+        if req.slo_class is None:
+            return None
+        return self.slo_classes.get(req.slo_class)
+
+    def _slo_rank(self, req) -> int:
+        """Urgency rank forwarded to class-aware batchers (0 = none).
+        Always 0 when slo_aware is off: accounting stays, influence
+        stops."""
+        if not self.slo_aware or req.slo_class is None:
+            return 0
+        return self._slo_ranks.get(req.slo_class, 0)
+
+    def _class_count(self, req, outcome: str):
+        log = self.class_log.get(req.slo_class) if req.slo_class else None
+        if log is not None:
+            log[outcome] += 1
+
+    def _account_completion(self, req, rec):
+        """Fold a finished request's batcher log record into the
+        per-class TTFT/TPOT histograms and the tenant service clock.
+        ``rec`` is None on the simulated-cloud path (no batcher log):
+        the tenant is still credited a nominal unit so sim-only tenants
+        exist in the fairness picture."""
+        work = 1
+        if rec is not None:
+            work = max(1, rec.get("prompt_tokens", 0)
+                       - rec.get("tokens_skipped", 0)
+                       + rec.get("generated_tokens", 0))
+        self.tenant_service[req.user] = \
+            self.tenant_service.get(req.user, 0) + work
+        log = self.class_log.get(req.slo_class) if req.slo_class else None
+        if log is None:
+            return
+        log["completed"] += 1
+        if rec is None or "ttft_work" not in rec:
+            return
+        log["ttft_work"].append(rec["ttft_work"])
+        if "done_work" in rec:
+            # same TPOT formula as obs.metrics.collect_batcher_metrics:
+            # decode work past the first token, per decode token
+            span = rec["done_work"] - rec["submit_work"] - rec["ttft_work"]
+            toks = max(rec.get("generated_tokens", 0) - 1, 1)
+            log["tpot_work"].append(span / toks)
+
+    def _fair_order(self, pool):
+        """Deterministic fair-queueing order for the tick's routing pool:
+        each tenant's k-th queued request sorts into round k, rounds
+        break ties by accumulated work-clock service (least-served
+        first), then rid. Plain FCFS would hand the whole tick's
+        admission capacity to whichever tenant submitted first."""
+        nth: dict = {}
+        rounds = {}
+        for p in pool:
+            k = nth.get(p.req.user, 0)
+            nth[p.req.user] = k + 1
+            rounds[p.rid] = k
+        pool.sort(key=lambda p: (rounds[p.rid],
+                                 self.tenant_service.get(p.req.user, 0),
+                                 p.rid))
+
+    def _report_slo_pressure(self):
+        """Feed per-island SLO lag into TIDE's queueing term: for every
+        in-flight request whose class has a finite work-clock target,
+        the overshoot past that target (TTFT while queued/prefilling,
+        TPOT once decoding) sums into a lag the router prices as extra
+        queue depth on that island — new work steers away from islands
+        that are already missing their classes' targets."""
+        lags: dict = {}
+        for (iid, brid), (p, _d) in self._local_inflight.items():
+            cls = self._class_of(p.req)
+            if cls is None:
+                continue
+            b = self.batchers.get(iid)
+            if b is None:
+                continue
+            rec = b.request_log.get(brid)
+            if rec is None or "outcome" in rec:
+                continue
+            if "ttft_work" not in rec:
+                if math.isfinite(cls.ttft_work_target):
+                    lag = (b.work_clock - rec["submit_work"]) \
+                        - cls.ttft_work_target
+                    if lag > 0.0:
+                        lags[iid] = lags.get(iid, 0.0) + lag
+            elif math.isfinite(cls.tpot_work_target):
+                toks = None
+                for s in b.slots:
+                    if s.active and s.request_id == brid:
+                        toks = len(s.generated) + getattr(s, "gen_dev", 0)
+                        break
+                if not toks:
+                    continue
+                elapsed = b.work_clock - rec["submit_work"] \
+                    - rec["ttft_work"]
+                lag = elapsed - max(toks - 1, 1) * cls.tpot_work_target
+                if lag > 0.0:
+                    lags[iid] = lags.get(iid, 0.0) + lag
+        for iid, lag in sorted(lags.items()):
+            self.waves.tide.report_slo_lag(iid, lag)
+
+    def _snapshot_fairness(self):
+        """Per-tick min-Jain snapshot over tenants that have entered the
+        pool. Only sampled once every seen tenant has nonzero service —
+        the instant before a tenant's first completion lands, a zero in
+        the vector would read as unfairness that no scheduler could
+        have avoided."""
+        if len(self._tenant_seen) < 2:
+            return
+        vals = [self.tenant_service.get(t, 0) for t in self._tenant_seen]
+        if all(vals):
+            self.tick_stats["fairness_min_jain"] = min(
+                self.tick_stats["fairness_min_jain"], jain_index(vals))
+
+    def slo_report(self) -> dict:
+        """Per-class attainment summary from the deterministic work-clock
+        records: TTFT/TPOT percentiles, attainment fractions against the
+        class targets, and terminal outcome counts."""
+        out = {}
+        for name in sorted(self.slo_classes):
+            cls = self.slo_classes[name]
+            log = self.class_log[name]
+            n = log["completed"]
+            row = {"completed": n, "expired": log["expired"],
+                   "shed": log["shed"], "rejected": log["rejected"]}
+            if log["ttft_work"]:
+                row["ttft_work_p50"] = percentile(log["ttft_work"], 0.5)
+                row["ttft_work_p95"] = percentile(log["ttft_work"], 0.95)
+                if math.isfinite(cls.ttft_work_target):
+                    row["ttft_attainment"] = sum(
+                        1 for v in log["ttft_work"]
+                        if v <= cls.ttft_work_target) / len(log["ttft_work"])
+            if log["tpot_work"]:
+                row["tpot_work_p95"] = percentile(log["tpot_work"], 0.95)
+                if math.isfinite(cls.tpot_work_target):
+                    row["tpot_attainment"] = sum(
+                        1 for v in log["tpot_work"]
+                        if v <= cls.tpot_work_target) / len(log["tpot_work"])
+            terminal = n + log["expired"]
+            if terminal:
+                row["deadline_attainment"] = n / terminal
+            out[name] = row
+        return out
 
     # ----------------------------------------------------- island churn
     def drain_island(self, island_id: str, deregister: bool = False):
@@ -610,6 +789,7 @@ class TickOrchestrator:
         self.results[p.rid] = None
         self._placement_backoff.pop(p.rid, None)
         self.tick_stats["expired"] += 1
+        self._class_count(p.req, "expired")
         if island is not None:
             self.waves.tide.note_expiry(island)
         self._otrace("expire", rid=p.rid, stage=stage, island=island)
@@ -690,6 +870,7 @@ class TickOrchestrator:
                                           -1.0))
             self.results[p.rid] = None
             self.tick_stats["shed"] += 1
+            self._class_count(p.req, "shed")
             self._otrace("reject", rid=p.rid,
                          reason=str(RejectReason.SHED))
         if drop:
@@ -829,6 +1010,8 @@ class TickOrchestrator:
         self._expire_requests()
         self._shed_overload()
         pool, self.pending = self.pending, []
+        if self.fair_tenancy and len(pool) > 1:
+            self._fair_order(pool)
         if pool:
             if self.tracer is not None:
                 # per-island capacity snapshot for this routing pass —
@@ -850,6 +1033,7 @@ class TickOrchestrator:
                     self.rejected.append(d)
                     self.results[p.rid] = None
                     self._placement_backoff.pop(p.rid, None)
+                    self._class_count(p.req, "rejected")
                     self._otrace("reject", rid=p.rid, reason=d.reason)
                     continue
                 self.tick_stats["routed"] += 1
@@ -913,7 +1097,8 @@ class TickOrchestrator:
                         brid = b.submit(
                             query, p.max_new_tokens,
                             trust_tier=trust_tier_for_sensitivity(
-                                d.sensitivity))
+                                d.sensitivity),
+                            slo_rank=self._slo_rank(p.req))
                         self._otrace("dispatch", rid=p.rid,
                                      island=island.island_id, brid=brid)
                     self._local_inflight[(island.island_id, brid)] = (p, d)
@@ -954,10 +1139,12 @@ class TickOrchestrator:
                 if text is None:       # executor-level rejection (e.g. the
                     self.rejected.append(d)    # request can't fit the pool)
                     self.results[p.rid] = None
+                    self._class_count(p.req, "rejected")
                     self._otrace("reject", rid=p.rid, island=iid,
                                  reason="executor")
                     continue
-                completed.append(self._complete(p, d, text))
+                completed.append(self._complete(
+                    p, d, text, rec=b.request_log.get(brid)))
             # KV-pool pressure feedback + telemetry (paged batchers only)
             kv_pool = getattr(b, "pool", None)
             if kv_pool is not None:
@@ -993,6 +1180,10 @@ class TickOrchestrator:
         for iid, b in self.batchers.items():
             waves.tide.report_progress(
                 iid, b.work_clock - self._work_seen.get(iid, 0), b.busy())
+        # per-class SLO lag joins progress in the routing feedback loop
+        # (slo_aware only: the accounting-only arm must not steer)
+        if self.slo_aware and self.slo_classes:
+            self._report_slo_pressure()
         self._advance_mesh_work()
         # admission vs prefill-dispatch counts (chunked prefill makes the
         # two diverge: one admission may dispatch many chunks — or none)
@@ -1050,11 +1241,13 @@ class TickOrchestrator:
                         raise AssertionError(
                             f"PagePool audit failed on {iid} at tick "
                             f"{self.tick_stats['ticks']}: {e}") from e
+        self._snapshot_fairness()
         self.tick_stats["ticks"] += 1
         return completed
 
     def _complete(self, p, d, text, exec_ms=0.0,
-                  include_base=True) -> Response:
+                  include_base=True, rec=None) -> Response:
+        self._account_completion(p.req, rec)
         if d.sanitize and d.placeholder_store is not None:
             text = self.waves.mist.desanitize(text, d.placeholder_store)
         elapsed = (self.waves.tide.clock - p.submitted_at) * 1000.0
@@ -1106,6 +1299,10 @@ class TickOrchestrator:
         if status is not None:
             s["island_status"] = {i.island_id: status(i.island_id)
                                   for i in self.registry.all()}
+        if self.slo_classes:
+            s["slo"] = self.slo_report()
+        if self.tenant_service:
+            s["tenant_service"] = dict(sorted(self.tenant_service.items()))
         return s
 
 
@@ -1114,7 +1311,8 @@ def build_island_batchers(cfg, registry, cache="auto", params=None,
                           page_size=16, pool_headroom=1.0, seed=0,
                           temperature=0.0, prefill="chunked",
                           prefill_token_budget=None, fused=True,
-                          constant_shape=False, tier_quotas=None):
+                          constant_shape=False, tier_quotas=None,
+                          class_aware=False):
     """Per-SHORE-island continuous batchers with KV pools sized from each
     island's declared ``capacity_units``.
 
@@ -1144,6 +1342,7 @@ def build_island_batchers(cfg, registry, cache="auto", params=None,
             page_size=page_size, prefill=prefill,
             prefill_token_budget=prefill_token_budget, fused=fused,
             constant_shape=constant_shape, tier_quotas=tier_quotas,
+            class_aware=class_aware,
             num_pages=max(2, int(slots * pages_per_seq
                                  * pool_headroom)) + 1)
         if params is None:

@@ -1,0 +1,272 @@
+"""SLO-class-aware scheduling and tenant fairness over the trace harness.
+
+Fast layers first: pure-Python unit tests for the rank map, the TIDE lag
+feedback and the fair pool ordering; one <30s smoke trace through the
+real mesh; then the ``slow``-marked load tests (the 1k SLO-aware-vs-
+blind A/B and the 10k end-to-end stream) that the CI ``trace`` leg runs
+alongside the benchmark. Everything gates on work-clock metrics — the
+only clock the noisy-wallclock rule lets CI compare."""
+from __future__ import annotations
+
+import math
+
+import pytest
+
+from repro.configs.base import get_config
+from repro.core.islands import IslandRegistry, personal_island
+from repro.core.lighthouse import Lighthouse
+from repro.core.mist import MIST
+from repro.core.tide import SLO_LAG_TOKENS_PER_UNIT, TIDE
+from repro.core.tracegen import (ArrivalSpec, SLOClass, TraceSpec,
+                                 generate_trace, stream_trace)
+from repro.core.waves import WAVES, Policy, Request
+from repro.obs.metrics import collect_orchestrator_metrics, jain_index
+from repro.serving.degrade import slo_rank_map
+from repro.serving.engine import (LocalModelServer, PendingRequest,
+                                  TickOrchestrator, build_island_batchers)
+
+CLASSES = {
+    "interactive": SLOClass("interactive", deadline_ms=2400.0,
+                            ttft_work_target=256.0, tpot_work_target=64.0,
+                            priority="primary"),
+    "standard": SLOClass("standard", deadline_ms=5000.0,
+                         ttft_work_target=768.0, tpot_work_target=128.0,
+                         priority="secondary"),
+    "batch": SLOClass("batch", priority="burstable"),
+}
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("smollm-135m").reduced()
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return LocalModelServer(cfg, max_len=160).params
+
+
+def _mesh(cfg, params, *, islands=3, slo_aware=True, class_aware=True,
+          fair_tenancy=False, slo_classes=None, decode_ticks=4,
+          overload=None):
+    reg = IslandRegistry()
+    for i in range(islands):
+        iid = f"isl{i}"
+        reg.register(personal_island(iid, latency_ms=120 + 30 * i,
+                                     capacity_units=2.0),
+                     reg.attestation_token(iid))
+    mist = MIST()
+    tide = TIDE(reg)
+    lh = Lighthouse(reg)
+    for i in reg.all():
+        lh.heartbeat(i.island_id)
+    waves = WAVES(mist, tide, lh, Policy(on_infeasible="queue_local"))
+    bats = build_island_batchers(cfg, reg, cache="paged", max_len=96,
+                                 slots_per_capacity_unit=2.0,
+                                 params=params, class_aware=class_aware)
+    return TickOrchestrator(
+        waves, reg, bats, decode_ticks_per_tick=decode_ticks,
+        overload=overload,
+        slo_classes=CLASSES if slo_classes is None else slo_classes,
+        slo_aware=slo_aware, fair_tenancy=fair_tenancy)
+
+
+# ------------------------------------------------------------- unit layer
+
+def test_slo_rank_map_orders_by_ttft_target():
+    ranks = slo_rank_map(CLASSES.values())
+    # tighter finite TTFT target => higher rank; no target => 0
+    assert ranks["interactive"] > ranks["standard"] > ranks["batch"] == 0
+
+
+def test_slo_rank_map_ties_break_by_name():
+    a = SLOClass("a", ttft_work_target=100.0)
+    b = SLOClass("b", ttft_work_target=100.0)
+    # equal targets: deterministic name order, input order irrelevant
+    assert slo_rank_map([b, a]) == slo_rank_map([a, b]) == {"a": 1, "b": 2}
+
+
+def test_jain_index_known_values():
+    assert jain_index([5, 5, 5]) == pytest.approx(1.0)
+    assert jain_index([1, 0, 0]) == pytest.approx(1 / 3)
+    assert jain_index([]) == 1.0
+    assert jain_index([0, 0]) == 1.0
+
+
+def test_tide_slo_lag_raises_effective_latency():
+    reg = IslandRegistry()
+    isl = personal_island("a", latency_ms=100, capacity_units=2.0)
+    reg.register(isl, reg.attestation_token("a"))
+    tide = TIDE(reg)
+    base = tide.effective_latency_ms(isl)
+    tide.report_slo_lag("a", 4.0 * SLO_LAG_TOKENS_PER_UNIT)
+    assert tide.effective_latency_ms(isl) > base
+    # zero/negative lag and unknown islands are no-ops
+    tide2 = TIDE(reg)
+    tide2.report_slo_lag("a", 0.0)
+    tide2.report_slo_lag("a", -5.0)
+    tide2.report_slo_lag("ghost", 100.0)
+    assert tide2.effective_latency_ms(isl) == pytest.approx(base)
+
+
+def _pend(rid, user):
+    return PendingRequest(rid, Request(query=f"q{rid}", user=user), 4, 0.0)
+
+
+def test_fair_order_interleaves_tenants():
+    orch = TickOrchestrator.__new__(TickOrchestrator)
+    orch.tenant_service = {}
+    pool = [_pend(0, "a"), _pend(1, "a"), _pend(2, "a"),
+            _pend(3, "b"), _pend(4, "b"), _pend(5, "c")]
+    orch._fair_order(pool)
+    assert [p.req.user for p in pool] == ["a", "b", "c", "a", "b", "a"]
+
+
+def test_fair_order_prefers_least_served_tenant():
+    orch = TickOrchestrator.__new__(TickOrchestrator)
+    orch.tenant_service = {"a": 500, "b": 10}
+    pool = [_pend(0, "a"), _pend(1, "b")]
+    orch._fair_order(pool)
+    assert [p.req.user for p in pool] == ["b", "a"]
+
+
+def test_submit_inherits_class_deadline(cfg, params):
+    orch = _mesh(cfg, params, islands=1)
+    rid = orch.submit(Request(query="hello there", slo_class="interactive",
+                              sensitivity_override=0.9))
+    p = next(p for p in orch.pending if p.rid == rid)
+    assert p.deadline_work == orch.mesh_work + 2400.0
+    # a request-level deadline wins over the class deadline
+    rid2 = orch.submit(Request(query="own deadline", deadline_ms=100.0,
+                               slo_class="interactive",
+                               sensitivity_override=0.9))
+    p2 = next(p for p in orch.pending if p.rid == rid2)
+    assert p2.deadline_work == orch.mesh_work + 100.0
+    # batch has no deadline: budget stays infinite
+    rid3 = orch.submit(Request(query="no deadline", slo_class="batch",
+                               sensitivity_override=0.9))
+    p3 = next(p for p in orch.pending if p.rid == rid3)
+    assert math.isinf(p3.deadline_work)
+
+
+def test_class_aware_queue_pick_prefers_urgent(cfg, params):
+    orch = _mesh(cfg, params, islands=1)
+    b = next(iter(orch.batchers.values()))
+    assert b.class_aware
+    # hand-build a queue: two low-rank entries ahead of a high-rank one
+    ra = b.submit("low urgency aaaa", 2, slo_rank=1)
+    rb = b.submit("low urgency bbbb", 2, slo_rank=1)
+    rc = b.submit("high urgency cccc", 2, slo_rank=2)
+    qi = b._queue_pick()
+    assert b.queue[qi][0] == rc
+    # FCFS within a rank: with the high-rank entry gone, the oldest wins
+    b.queue.pop(qi)
+    assert b.queue[b._queue_pick()][0] == ra
+    b.queue.clear()
+    assert b._queue_pick() is None
+
+
+def test_rank_blind_batcher_stays_fcfs(cfg, params):
+    orch = _mesh(cfg, params, islands=1, class_aware=False)
+    b = next(iter(orch.batchers.values()))
+    b.submit("first in line aaaa", 2, slo_rank=1)
+    b.submit("second in line bbb", 2, slo_rank=3)
+    assert b._queue_pick() == 0
+
+
+# ----------------------------------------------------------- smoke layer
+
+def test_smoke_trace_slo_classes(cfg, params):
+    """<30s tier-1 smoke: a 100-request trace streams to completion and
+    the class ladder shows in the work-clock TTFT ordering."""
+    spec = TraceSpec(n_requests=100, seed=3,
+                     classes=tuple((c, w) for c, w in
+                                   zip(CLASSES.values(), (0.3, 0.45, 0.25))),
+                     arrivals=ArrivalSpec(base_rate=4.0))
+    orch = _mesh(cfg, params, islands=2, fair_tenancy=True)
+    rids = stream_trace(orch, generate_trace(spec))
+    assert all(r in orch.results for r in rids)
+    slo = orch.slo_report()
+    assert sum(row["completed"] + row["expired"] + row["shed"]
+               + row["rejected"] for row in slo.values()) == 100
+    assert slo["interactive"]["completed"] > 0
+    assert (slo["interactive"]["ttft_work_p50"]
+            < slo["batch"]["ttft_work_p50"])
+    # the registry fold sees the same accounting
+    snap = collect_orchestrator_metrics(orch).snapshot()
+    assert snap["counters"]["completed[interactive]"] \
+        == slo["interactive"]["completed"]
+    assert snap["counters"]["tenants"] == len(orch.tenant_service)
+    stats = orch.stats()
+    assert "slo" in stats and "tenant_service" in stats
+
+
+def test_tenant_fairness_jain_bound(cfg, params):
+    """Controlled contention (identical request shapes, adversarial
+    submission order): fair tenancy holds Jain >= 0.9 at a mid-run
+    horizon; the FCFS positive control starves the late tenants and
+    lands well below."""
+    def run(fair):
+        orch = _mesh(cfg, params, slo_aware=False, class_aware=False,
+                     fair_tenancy=fair)
+        for t in range(3):
+            for i in range(32):
+                orch.submit(Request(query=f"tenant t{t} job {i:03d} "
+                                    + "x" * 16,
+                                    user=f"t{t}",
+                                    sensitivity_override=0.9),
+                            max_new_tokens=4)
+        for _ in range(4):
+            orch.tick()
+        return jain_index(orch.tenant_service.get(f"t{t}", 0)
+                          for t in range(3))
+
+    assert run(fair=True) >= 0.9
+    assert run(fair=False) < 0.8
+
+
+# ------------------------------------------------------------ slow layer
+
+@pytest.mark.slow
+def test_slo_aware_beats_blind_ab(cfg, params):
+    """1k-request A/B on the SAME trace: SLO-aware routing must beat the
+    SLO-blind arm on the constrained (interactive) class, on work-clock
+    TTFT attainment."""
+    spec = TraceSpec(n_requests=1000, seed=0,
+                     classes=tuple((c, w) for c, w in
+                                   zip(CLASSES.values(), (0.3, 0.45, 0.25))),
+                     arrivals=ArrivalSpec(base_rate=4.0))
+    trace = generate_trace(spec)
+
+    def attainment(slo_aware, class_aware):
+        orch = _mesh(cfg, params, slo_aware=slo_aware,
+                     class_aware=class_aware)
+        rids = stream_trace(orch, trace)
+        assert sum(1 for r in rids if r not in orch.results) == 0
+        return orch.slo_report()["interactive"].get("ttft_attainment", 0.0)
+
+    att_on = attainment(True, True)
+    att_off = attainment(False, False)
+    assert att_on - att_off >= 0.15, (att_on, att_off)
+    assert att_on >= 0.80
+
+
+@pytest.mark.slow
+def test_e2e_10k_trace_streams_clean(cfg, params):
+    """The 10k end-to-end stream: every request reaches a terminal, no
+    request is stranded, and per-class accounting covers the full
+    population."""
+    spec = TraceSpec(n_requests=10_000, seed=0,
+                     classes=tuple((c, w) for c, w in
+                                   zip(CLASSES.values(), (0.3, 0.45, 0.25))),
+                     arrivals=ArrivalSpec(base_rate=4.0))
+    orch = _mesh(cfg, params, fair_tenancy=True)
+    rids = stream_trace(orch, generate_trace(spec))
+    assert len(rids) == 10_000
+    assert sum(1 for r in rids if r not in orch.results) == 0
+    slo = orch.slo_report()
+    assert sum(row["completed"] + row["expired"] + row["shed"]
+               + row["rejected"] for row in slo.values()) == 10_000
+    assert slo["interactive"].get("ttft_attainment", 0.0) >= 0.80
+    assert all(row.get("deadline_attainment", 1.0) >= 0.90
+               for row in slo.values())

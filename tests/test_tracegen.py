@@ -1,0 +1,330 @@
+"""Trace-generator properties and workload-dedup parity locks.
+
+Everything here is pure-Python (no JAX, no model): the trace generator
+must be safe to property-test densely. The parity tests pin the
+``core.workload`` generators to their PRE-tracegen byte streams — the
+committed benchmark artifacts were produced by those exact rng call
+sequences, so any drift here invalidates artifacts silently.
+"""
+from __future__ import annotations
+
+import math
+import random
+
+import pytest
+
+from _hypothesis_shim import given, settings, st
+from repro.core import workload
+from repro.core.tracegen import (ArrivalSpec, LengthSpec, PrefixSpec,
+                                 SENSITIVITY_FOR_TIER, TraceSpec,
+                                 ZipfSampler, bounded_pareto_int,
+                                 cyclic_text, generate_trace, head_corpus,
+                                 mixture_index, poisson,
+                                 sample_mixture_template, stream_trace,
+                                 trace_summary)
+from repro.serving.kvpool import trust_tier_for_sensitivity
+
+
+# ------------------------------------------------------------ determinism
+
+def test_same_spec_same_trace_bit_identical():
+    spec = TraceSpec(n_requests=500, seed=11)
+    assert generate_trace(spec) == generate_trace(spec)
+
+
+def test_different_seed_different_trace():
+    a = generate_trace(TraceSpec(n_requests=200, seed=0))
+    b = generate_trace(TraceSpec(n_requests=200, seed=1))
+    assert a != b
+
+
+@given(st.integers(min_value=0, max_value=2 ** 32 - 1),
+       st.integers(min_value=1, max_value=300))
+@settings(max_examples=20, deadline=None)
+def test_property_seed_determinism(seed, n):
+    spec = TraceSpec(n_requests=n, seed=seed)
+    assert generate_trace(spec) == generate_trace(spec)
+
+
+def test_no_wall_clock_dependence(monkeypatch):
+    """The generator must never consult wall time: arrivals live on
+    virtual ticks only (the noisy-wallclock rule)."""
+    import time
+
+    def boom(*_a, **_k):
+        raise AssertionError("tracegen consulted wall time")
+
+    for fn in ("time", "monotonic", "perf_counter", "time_ns",
+               "monotonic_ns", "perf_counter_ns"):
+        monkeypatch.setattr(time, fn, boom)
+    trace = generate_trace(TraceSpec(n_requests=300, seed=5))
+    assert len(trace) == 300
+
+
+# ------------------------------------------------------- trace structure
+
+def test_arrival_ticks_monotonic_and_indexed():
+    trace = generate_trace(TraceSpec(n_requests=800, seed=3))
+    assert [r.idx for r in trace] == list(range(800))
+    assert all(a.arrival_tick <= b.arrival_tick
+               for a, b in zip(trace, trace[1:]))
+
+
+def test_mix_matches_requested_distribution():
+    spec = TraceSpec(n_requests=4000, seed=9)
+    s = trace_summary(generate_trace(spec))
+    for name, want in (("interactive", 0.30), ("standard", 0.45),
+                       ("batch", 0.25)):
+        got = s["class_mix"][name] / s["n"]
+        assert abs(got - want) < 0.04, (name, got, want)
+    for tier, want in spec.tiers:
+        got = s["tier_mix"][tier] / s["n"]
+        assert abs(got - want) < 0.04, (tier, got, want)
+    for tenant, _w in spec.tenants:
+        got = s["tenant_mix"][tenant] / s["n"]
+        assert abs(got - 0.25) < 0.04, (tenant, got)
+
+
+def test_zipf_prefix_reuse_within_spec_bounds():
+    spec = TraceSpec(n_requests=4000, seed=2)
+    trace = generate_trace(spec)
+    s = trace_summary(trace)
+    assert abs(s["reuse_rate"] - spec.prefix.reuse_p) < 0.04
+    # Zipf popularity: rank 0 strictly dominates the median rank, and
+    # every reused head actually starts with its corpus text
+    heads = head_corpus(spec.prefix)
+    counts = s["head_counts"]
+    mid = spec.prefix.corpus_size // 2
+    assert counts.get(0, 0) > counts.get(mid, 0)
+    for r in trace[:200]:
+        if r.prefix_id >= 0:
+            assert r.prompt.startswith(heads[r.prefix_id])
+
+
+def test_lengths_bounded_and_heavy_tailed():
+    spec = TraceSpec(n_requests=3000, seed=4)
+    trace = generate_trace(spec)
+    L = spec.lengths
+    assert all(L.prompt_min <= len(r.prompt) <= L.prompt_max
+               for r in trace)
+    assert all(L.output_min <= r.max_new_tokens <= L.output_max
+               for r in trace)
+    # heavy tail: short prompts dominate, but the max is reached
+    lens = sorted(len(r.prompt) for r in trace)
+    assert lens[len(lens) // 2] < (L.prompt_min + L.prompt_max) / 2
+    assert lens[-1] == L.prompt_max
+
+
+def test_burst_windows_raise_arrival_rate():
+    arr = ArrivalSpec(base_rate=4.0, diurnal_period=0, burst_every=100,
+                      burst_length=10, burst_multiplier=3.0)
+    assert arr.rate_at(5) == pytest.approx(12.0)
+    assert arr.rate_at(50) == pytest.approx(4.0)
+
+
+def test_diurnal_ramp_modulates_rate():
+    arr = ArrivalSpec(base_rate=4.0, diurnal_period=400,
+                      diurnal_amplitude=0.5, burst_every=0)
+    assert arr.rate_at(100) == pytest.approx(6.0)   # sin peak
+    assert arr.rate_at(300) == pytest.approx(2.0)   # sin trough
+
+
+def test_to_request_carries_class_tenant_tier():
+    trace = generate_trace(TraceSpec(n_requests=300, seed=6))
+    for tr in trace:
+        req = tr.to_request()
+        assert req.slo_class == tr.slo_class
+        assert req.user == tr.tenant
+        assert req.priority == tr.priority
+        # the sensitivity override maps back to exactly the drawn tier
+        assert req.sensitivity_override == SENSITIVITY_FOR_TIER[tr.trust_tier]
+        if tr.trust_tier is not None:
+            assert trust_tier_for_sensitivity(
+                req.sensitivity_override) == tr.trust_tier
+
+
+def test_scaled_keeps_shape():
+    spec = TraceSpec(n_requests=1000, seed=0)
+    small = spec.scaled(100)
+    assert small.n_requests == 100 and small.seed == spec.seed
+    # a scaled trace is a prefix in distribution, not literally — but the
+    # generator stays deterministic for it
+    assert generate_trace(small) == generate_trace(small)
+
+
+def test_stream_trace_virtual_time_only():
+    """stream_trace drives a duck-typed orchestrator on virtual ticks:
+    arrivals submit at their arrival_tick, never earlier."""
+
+    class FakeOrch:
+        def __init__(self):
+            self.tick_no = 0
+            self.submitted = []        # (tick, rid)
+            self._rid = 0
+            self.results = {}
+
+        def submit(self, req, max_new_tokens=0):
+            rid = self._rid
+            self._rid += 1
+            self.submitted.append((self.tick_no, rid, req))
+            return rid
+
+        def tick(self):
+            self.tick_no += 1
+
+        def busy(self):
+            return False
+
+    spec = TraceSpec(n_requests=120, seed=8)
+    trace = generate_trace(spec)
+    orch = FakeOrch()
+    rids = stream_trace(orch, trace)
+    assert rids == list(range(120))
+    by_rid = {rid: tick for tick, rid, _req in orch.submitted}
+    for tr in trace:
+        assert by_rid[tr.idx] == tr.arrival_tick
+
+
+# ----------------------------------------------------------- primitives
+
+def test_mixture_index_bounds_and_determinism():
+    rng = random.Random(0)
+    idxs = [mixture_index(rng, (0.2, 0.3, 0.5)) for _ in range(2000)]
+    assert set(idxs) <= {0, 1, 2}
+    share2 = idxs.count(2) / len(idxs)
+    assert abs(share2 - 0.5) < 0.05
+    # unnormalized weights behave identically to their normalized form
+    a = [mixture_index(random.Random(7), (2, 3, 5)) for _ in range(200)]
+    b = [mixture_index(random.Random(7), (0.2, 0.3, 0.5))
+         for _ in range(200)]
+    assert a == b
+
+
+def test_bounded_pareto_respects_bounds():
+    rng = random.Random(1)
+    vals = [bounded_pareto_int(rng, 1.1, 12, 88) for _ in range(5000)]
+    assert min(vals) == 12 and max(vals) == 88
+    assert sorted(vals)[len(vals) // 2] < 40      # mass near the floor
+
+
+def test_poisson_large_lambda_no_underflow():
+    rng = random.Random(2)
+    vals = [poisson(rng, 500.0) for _ in range(50)]
+    mean = sum(vals) / len(vals)
+    assert abs(mean - 500.0) < 25.0
+    assert poisson(rng, 0.0) == 0
+
+
+def test_zipf_sampler_rank_popularity():
+    rng = random.Random(3)
+    z = ZipfSampler(16, 1.1)
+    counts = [0] * 16
+    for _ in range(8000):
+        counts[z.sample(rng)] += 1
+    assert counts[0] > counts[4] > counts[15]
+    with pytest.raises(ValueError):
+        ZipfSampler(0, 1.0)
+
+
+def test_cyclic_text_exact_length():
+    assert len(cyclic_text("abc ", 10)) == 10
+    assert cyclic_text("abc ", 6) == "abc ab"
+
+
+def test_single_bucket_mixture_skips_uniform_draw():
+    """The legacy legal generator drew NO mixture uniform; the shared
+    primitive must not shift the rng stream for single-bucket calls."""
+    buckets = ((1.0, ["t {x}"], "k", "p"),)
+    rng_a = random.Random(5)
+    sample_mixture_template(rng_a, buckets, lambda r: {"x": r.random()})
+    rng_b = random.Random(5)
+    rng_b.choice(["t {x}"])
+    rng_b.random()
+    assert rng_a.random() == rng_b.random()
+
+
+# ------------------------------------------------- workload parity locks
+#
+# Inline replicas of the PRE-dedup generators, copied verbatim from the
+# repository history. The folded generators must reproduce their byte
+# streams exactly, for any seed.
+
+def _legacy_healthcare(n, seed, mix=(0.40, 0.35, 0.25)):
+    rng = random.Random(seed)
+    out = []
+    for _ in range(n):
+        u = rng.random()
+        if u < mix[0]:
+            t = rng.choice(workload._HIGH)
+            kind, prio = "high", "primary"
+        elif u < mix[0] + mix[1]:
+            t = rng.choice(workload._MODERATE)
+            kind, prio = "moderate", "secondary"
+        else:
+            t = rng.choice(workload._LOW)
+            kind, prio = "low", "burstable"
+        q = t.format(age=rng.randint(25, 80),
+                     name=rng.choice(workload._NAMES),
+                     mrn=rng.randint(10 ** 5, 10 ** 6),
+                     ssn=f"{rng.randint(100,999)}-{rng.randint(10,99)}"
+                         f"-{rng.randint(1000,9999)}",
+                     dd=rng.randint(10, 28))
+        out.append((q, prio, f"u{rng.randint(0,3)}", kind))
+    return out
+
+
+def _legacy_legal(n, seed):
+    rng = random.Random(seed)
+    temps = [
+        "Find precedents for breach of fiduciary duty, case no: {x}",
+        "Privileged and confidential: summarize deposition of {name}",
+        "Retrieve similar contracts to the {org} asset purchase agreement",
+    ]
+    out = []
+    for _ in range(n):
+        q = rng.choice(temps).format(
+            x=f"22-cv-{rng.randint(1000,9999)}",
+            name=rng.choice(workload._NAMES),
+            org=rng.choice(["Acme Corp", "Globex LLC", "Initech Inc"]))
+        out.append(q)
+    return out
+
+
+@pytest.mark.parametrize("seed", [0, 7, 42])
+def test_healthcare_parity_bit_identical(seed):
+    got = workload.healthcare_workload(120, seed=seed)
+    want = _legacy_healthcare(120, seed)
+    assert [(r.query, r.priority, r.user, k) for r, k in got] == want
+
+
+@pytest.mark.parametrize("seed", [0, 7, 42])
+def test_legal_parity_bit_identical(seed):
+    got = workload.legal_workload(80, seed=seed)
+    want = _legacy_legal(80, seed)
+    assert [r.query for r, _k in got] == want
+    assert all(k == "high" and r.dataset == "caselaw-10tb"
+               and r.priority == "secondary" for r, k in got)
+
+
+def test_tiered_serving_prompts_parity():
+    got = workload.tiered_serving_prompts(16, seed=7)
+    legacy = _legacy_healthcare(16, 7)
+    want = [(q, (1, 2, 3, None)[i % 4])
+            for i, (q, _p, _u, _k) in enumerate(legacy)]
+    assert got == want
+
+
+def test_shared_head_prompts_parity():
+    head, prompts = workload.shared_head_prompts(5)
+    legacy_head = "".join("the patient record header section "[i % 34]
+                          for i in range(workload.SHARED_HEAD_TOKENS))
+    assert head == legacy_head
+    assert prompts == [head + f" case {i}" for i in range(5)]
+
+
+def test_healthcare_mix_fractions():
+    wl = workload.healthcare_workload(2000, seed=0)
+    kinds = [k for _r, k in wl]
+    assert abs(kinds.count("high") / 2000 - 0.40) < 0.04
+    assert abs(kinds.count("moderate") / 2000 - 0.35) < 0.04
+    assert abs(kinds.count("low") / 2000 - 0.25) < 0.04
